@@ -1,0 +1,12 @@
+"""Benchmark harness — one module per paper table/figure:
+
+  primitive_ops    Table 4   per-op latencies vs HE3DB/ArcEDB
+  tpch_queries     Fig. 6    nine queries, opt vs unopt vs baselines
+  q6_breakdown     Table 5   Q6 phase breakdown (boot/filter/agg)
+  packing_scaling  Table 6   runtime vs rows within the packing limit
+  storage          Fig. 7    storage expansion vs bit-level systems
+  depth_model      Table 3   per-operator multiplicative depth
+  roofline         —         compute/memory/collective terms per dry-run cell
+
+`python -m benchmarks.run` executes all of them.
+"""

@@ -1,0 +1,85 @@
+"""Shared benchmark plumbing: cost calibration (measured on our JAX BFV,
+extrapolated to paper parameters) and result formatting."""
+from __future__ import annotations
+
+import functools
+import json
+import os
+
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+@functools.lru_cache(maxsize=None)
+def paper_costs(quick: bool = False):
+    """Per-op seconds at the paper's (n=32768, k=30).
+
+    Measured at (n=4096, k=8) on the real RNS-BFV backend, scaled with
+    the analytic complexity model (see engine/baseline.py).  ~30 s once
+    per process; cached to disk afterwards.
+    """
+    from repro.core.params import make_params
+    from repro.engine.baseline import OpCosts, extrapolate_costs, measure_costs
+
+    cache = os.path.join(RESULTS, "op_costs.json")
+    if os.path.exists(cache):
+        with open(cache) as f:
+            d = json.load(f)
+        measured = OpCosts(**d)
+    else:
+        params = make_params(n=1024 if quick else 4096, t=65537, k=8)
+        measured = measure_costs(params, reps=2)
+        os.makedirs(RESULTS, exist_ok=True)
+        with open(cache, "w") as f:
+            json.dump(measured.__dict__, f)
+    return extrapolate_costs(measured, 32768, 30)
+
+
+SEAL_EQ_MS_PER_SLOT = 0.09   # paper Table 4: NSHEDB equality on SEAL
+
+
+def seal_norm_factor(quick: bool = False) -> float:
+    """Our JAX BFV runs single-core; the paper's SEAL runs 16-core AVX.
+    Anchoring our EQ (identical circuit: 16 squarings) to the paper's
+    measured EQ gives a per-op normalization; every OTHER op's normalized
+    time is then a structural prediction the paper's Table 4 must match
+    (and does, within ~15% — see results/table4_primitive_ops.json)."""
+    from repro.core import compare as cmp
+    from repro.engine.backend import MockBackend
+    import numpy as np
+    bk = MockBackend()
+    x = bk.encrypt(np.arange(8))
+    bk.stats.reset()
+    cmp.eq_scalar(bk, x, 3)
+    ours_s = bk.stats.cost_seconds(paper_costs(quick).as_dict())
+    ours_ms_slot = ours_s / 32768 * 1000
+    return SEAL_EQ_MS_PER_SLOT / ours_ms_slot
+
+
+def table(rows: list[dict], title: str) -> str:
+    if not rows:
+        return f"== {title} ==\n(no rows)\n"
+    cols = list(rows[0])
+    widths = {c: max(len(str(c)), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    out = [f"== {title} =="]
+    out.append(" | ".join(str(c).ljust(widths[c]) for c in cols))
+    out.append("-+-".join("-" * widths[c] for c in cols))
+    for r in rows:
+        out.append(" | ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))
+    return "\n".join(out) + "\n"
+
+
+def save_json(name: str, payload) -> None:
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, name), "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+
+
+def fmt_s(x: float) -> str:
+    if x >= 100:
+        return f"{x:,.0f}"
+    if x >= 1:
+        return f"{x:.1f}"
+    return f"{x:.3f}"

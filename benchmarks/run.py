@@ -1,0 +1,44 @@
+"""Run every benchmark (one per paper table/figure) + the roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny scales / fewer sizes (CI mode)")
+    ap.add_argument("--only", default=None, help="comma-separated module names")
+    args = ap.parse_args()
+
+    from . import (depth_model, packing_scaling, primitive_ops, q6_breakdown,
+                   roofline, storage, tpch_queries)
+    mods = {
+        "depth_model": depth_model,
+        "primitive_ops": primitive_ops,
+        "storage": storage,
+        "q6_breakdown": q6_breakdown,
+        "packing_scaling": packing_scaling,
+        "tpch_queries": tpch_queries,
+        "roofline": roofline,
+    }
+    if args.only:
+        mods = {k: v for k, v in mods.items() if k in args.only.split(",")}
+    for name, mod in mods.items():
+        t0 = time.time()
+        print(f"\n######## {name} ########", flush=True)
+        try:
+            print(mod.main(quick=args.quick))
+        except Exception:
+            traceback.print_exc()
+            print(f"[{name}] FAILED")
+        print(f"[{name}] {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

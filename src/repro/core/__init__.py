@@ -1,0 +1,15 @@
+"""repro.core — RNS-BFV leveled homomorphic encryption in JAX.
+
+The paper's primary contribution (word-level LHE query execution) builds
+on this package: parameter sets, negacyclic NTT, the BFV scheme with HPS
+RNS multiplication, batch encoding, noise accounting, and the arithmetic
+comparison circuits (Fermat equality, BSGS range).
+
+The HE arithmetic needs exact 60-bit integer products, so x64 must be on
+before any JAX array is created. Importing repro.core flips it.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from .params import HEParams, make_params, paper_params, small_params, test_params  # noqa: E402,F401

@@ -1,0 +1,374 @@
+"""RNS-BFV scheme (HPS multiplication variant), JAX-native.
+
+Layout conventions
+------------------
+* polynomial:  (k, n) int64, limb-major, coefficients in [0, q_i)
+* ciphertext:  (2, k, n) — (c0, c1), coefficient domain
+* keys:        stored in NTT (evaluation) domain
+* key switch:  per-limb RNS gadget (digit i = centered residue mod q_i);
+               the gadget matrix g_i mod q_j is exactly the identity, so
+               the "encrypt g_i * s'" term touches only limb i.
+
+All deterministic arithmetic is jitted; sampling happens host-side with a
+seeded numpy Generator so tests are reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ntt as nttm
+from .mathutil import centered, crt_reconstruct
+from .noise import NoiseModel
+from .params import HEParams
+
+
+@dataclasses.dataclass
+class Ciphertext:
+    data: jnp.ndarray        # (2, k, n) int64, coefficient domain
+    noise: float             # analytic log2 |invariant noise|
+    params: HEParams
+
+    @property
+    def budget(self) -> float:
+        return -(self.noise + 1.0)
+
+
+@dataclasses.dataclass
+class SecretKey:
+    s: np.ndarray            # (n,) ternary
+    s_ntt: jnp.ndarray       # (k, n)
+
+
+@dataclasses.dataclass
+class PublicKey:
+    b_ntt: jnp.ndarray       # (k, n)
+    a_ntt: jnp.ndarray       # (k, n)
+
+
+@dataclasses.dataclass
+class KSwitchKey:
+    b: jnp.ndarray           # (k, k, n) NTT domain, digit-major
+    a: jnp.ndarray           # (k, k, n)
+
+
+@dataclasses.dataclass
+class Keys:
+    sk: SecretKey
+    pk: PublicKey
+    rlk: KSwitchKey
+    gks: dict[int, KSwitchKey]   # galois element -> key
+
+
+class BFVContext:
+    """Binds a parameter set; owns jitted primitives and key material ops."""
+
+    def __init__(self, params: HEParams, seed: int = 0):
+        self.params = params
+        self.noise_model = NoiseModel(params)
+        self.rng = np.random.default_rng(seed)
+        p = params
+        self.qQ = jnp.asarray(p.Q.q)
+        self.psiQ = jnp.asarray(p.Q.psi_rev)
+        self.ipsiQ = jnp.asarray(p.Q.ipsi_rev)
+        self.ninvQ = jnp.asarray(p.Q.n_inv)
+        self.qP = jnp.asarray(p.P.q)
+        self.psiP = jnp.asarray(p.P.psi_rev)
+        self.ipsiP = jnp.asarray(p.P.ipsi_rev)
+        self.ninvP = jnp.asarray(p.P.n_inv)
+        self.delta = jnp.asarray(p.delta_mod_q)          # (k,)
+        self.qinv_p = jnp.asarray(p.q_inv_mod_p)         # (kp,)
+        cqp, cpq = p.conv_q_to_p, p.conv_p_to_q
+        self.c_qp = tuple(jnp.asarray(x) for x in
+                          (cqp.a_hat_inv_mod_a, cqp.a_hat_mod_b, cqp.a_mod_b, cqp.a_inv))
+        self.c_pq = tuple(jnp.asarray(x) for x in
+                          (cpq.a_hat_inv_mod_a, cpq.a_hat_mod_b, cpq.a_mod_b, cpq.a_inv))
+        self._galois_tabs = {
+            g: (jnp.asarray(tab.src), jnp.asarray(tab.sign)) for g, tab in p.galois.items()
+        }
+        # jitted primitives
+        self._ntt_q = jax.jit(lambda a: nttm.ntt_ref(a, self.psiQ, self.qQ))
+        self._intt_q = jax.jit(lambda a: nttm.intt_ref(a, self.ipsiQ, self.ninvQ, self.qQ))
+        self._encrypt_j = jax.jit(self._encrypt_impl)
+        self._decrypt_j = jax.jit(self._decrypt_impl)
+        self._mul_j = jax.jit(self._mul_impl)
+        self._mul_plain_j = jax.jit(self._mul_plain_impl)
+        self._apply_galois_j = jax.jit(self._apply_galois_impl, static_argnums=1)
+
+    # ------------------------------------------------------------- sampling
+    def _sample_uniform_ntt(self) -> jnp.ndarray:
+        p = self.params
+        cols = [self.rng.integers(0, q, p.n, dtype=np.int64) for q in p.Q.primes]
+        return jnp.asarray(np.stack(cols))
+
+    def _sample_ternary(self) -> np.ndarray:
+        return self.rng.integers(-1, 2, self.params.n).astype(np.int64)
+
+    def _sample_err(self) -> np.ndarray:
+        e = np.rint(self.rng.normal(0.0, self.params.err_std, self.params.n))
+        bound = math.ceil(6 * self.params.err_std)
+        return np.clip(e, -bound, bound).astype(np.int64)
+
+    def _reduce_small(self, poly: np.ndarray) -> jnp.ndarray:
+        """(n,) small centered ints -> (k, n) residues."""
+        return jnp.asarray(poly[None, :] % np.asarray(self.params.Q.primes)[:, None])
+
+    # -------------------------------------------------------------- keygen
+    def keygen(self, galois_steps: tuple[int, ...] | None = None) -> Keys:
+        p = self.params
+        s = self._sample_ternary()
+        s_ntt = self._ntt_q(self._reduce_small(s))
+        a_ntt = self._sample_uniform_ntt()
+        e_ntt = self._ntt_q(self._reduce_small(self._sample_err()))
+        b_ntt = (-(a_ntt * s_ntt % self.qQ[:, None]) - e_ntt) % self.qQ[:, None]
+        pk = PublicKey(b_ntt=b_ntt, a_ntt=a_ntt)
+        sk = SecretKey(s=s, s_ntt=s_ntt)
+
+        s2_ntt = (s_ntt * s_ntt) % self.qQ[:, None]
+        rlk = self._make_kswitch_key(s_ntt, s2_ntt)
+
+        gks: dict[int, KSwitchKey] = {}
+        steps = galois_steps if galois_steps is not None else tuple(p.rot_gs)
+        gs = [p.rot_gs[st] for st in steps] + [p.rowswap_g]
+        for g in gs:
+            src, sign = self._galois_tabs[g]
+            s_rot = np.asarray((sign * jnp.asarray(s)[src]))
+            s_rot_ntt = self._ntt_q(self._reduce_small(s_rot))
+            gks[g] = self._make_kswitch_key(s_ntt, s_rot_ntt)
+        return Keys(sk=sk, pk=pk, rlk=rlk, gks=gks)
+
+    def _make_kswitch_key(self, s_ntt: jnp.ndarray, target_ntt: jnp.ndarray) -> KSwitchKey:
+        """KSK encrypting gadget(target): digit i carries target on limb i only."""
+        p = self.params
+        k = p.k
+        bs, as_ = [], []
+        for i in range(k):
+            a_i = self._sample_uniform_ntt()
+            e_i = self._ntt_q(self._reduce_small(self._sample_err()))
+            b_i = (-(a_i * s_ntt % self.qQ[:, None]) - e_i) % self.qQ[:, None]
+            b_i = b_i.at[i].set((b_i[i] + target_ntt[i]) % self.qQ[i])
+            bs.append(b_i)
+            as_.append(a_i)
+        return KSwitchKey(b=jnp.stack(bs), a=jnp.stack(as_))
+
+    # ------------------------------------------------------------- encrypt
+    def encrypt(self, m_poly: jnp.ndarray, pk: PublicKey) -> Ciphertext:
+        """m_poly: (n,) int64 mod t (use BatchEncoder to build it)."""
+        u = self._reduce_small(self._sample_ternary())
+        e0 = self._reduce_small(self._sample_err())
+        e1 = self._reduce_small(self._sample_err())
+        data = self._encrypt_j(jnp.asarray(m_poly), u, e0, e1, pk.b_ntt, pk.a_ntt)
+        return Ciphertext(data=data, noise=self.noise_model.fresh(), params=self.params)
+
+    def _encrypt_impl(self, m, u, e0, e1, pkb, pka):
+        q = self.qQ[:, None]
+        u_ntt = self._ntt_q(u)
+        c0 = (self._intt_q(pkb * u_ntt % q) + e0 + self.delta[:, None] * m[None, :]) % q
+        c1 = (self._intt_q(pka * u_ntt % q) + e1) % q
+        return jnp.stack([c0, c1])
+
+    def encrypt_zero(self, pk: PublicKey) -> Ciphertext:
+        return self.encrypt(jnp.zeros(self.params.n, dtype=jnp.int64), pk)
+
+    # ------------------------------------------------------------- decrypt
+    def decrypt(self, ct: Ciphertext, sk: SecretKey) -> jnp.ndarray:
+        return self._decrypt_j(ct.data, sk.s_ntt)
+
+    def _decrypt_impl(self, data, s_ntt):
+        p = self.params
+        q = self.qQ[:, None]
+        x = (data[0] + self._intt_q(self._ntt_q(data[1]) * s_ntt % q)) % q
+        hat_inv, _, _, q_inv_f = self.c_qp
+        y = x * hat_inv[:, None] % q
+        yt = y * p.t
+        int_part = jnp.sum(yt // q, axis=0)
+        frac = jnp.sum((yt % q).astype(jnp.float64) * q_inv_f[:, None], axis=0)
+        return (int_part + jnp.round(frac).astype(jnp.int64)) % p.t
+
+    # ------------------------------------------------------- add/sub/neg
+    def add(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+        return Ciphertext((a.data + b.data) % self.qQ[None, :, None],
+                          self.noise_model.add(a.noise, b.noise), self.params)
+
+    def sub(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+        return Ciphertext((a.data - b.data) % self.qQ[None, :, None],
+                          self.noise_model.add(a.noise, b.noise), self.params)
+
+    def neg(self, a: Ciphertext) -> Ciphertext:
+        return Ciphertext((-a.data) % self.qQ[None, :, None], a.noise, self.params)
+
+    def add_plain(self, a: Ciphertext, m_poly: jnp.ndarray) -> Ciphertext:
+        c0 = (a.data[0] + self.delta[:, None] * jnp.asarray(m_poly)[None, :]) % self.qQ[:, None]
+        return Ciphertext(a.data.at[0].set(c0), self.noise_model.add(a.noise, a.noise), self.params)
+
+    def sub_from_plain(self, m_poly: jnp.ndarray, a: Ciphertext) -> Ciphertext:
+        """Encrypted (m - a)."""
+        return self.add_plain(self.neg(a), m_poly)
+
+    # ------------------------------------------------------ plain multiply
+    def mul_plain(self, a: Ciphertext, m_poly: jnp.ndarray) -> Ciphertext:
+        data = self._mul_plain_j(a.data, jnp.asarray(m_poly))
+        return Ciphertext(data, self.noise_model.mul_plain(a.noise), self.params)
+
+    # ------------------------------------------------------ scalar constants
+    def mul_scalar(self, a: Ciphertext, c: int) -> Ciphertext:
+        """Multiply by the constant polynomial c — no NTT, tight noise growth."""
+        c %= self.params.t
+        data = (a.data * c) % self.qQ[None, :, None]
+        return Ciphertext(data, self.noise_model.mul_scalar(a.noise, c), self.params)
+
+    def add_scalar(self, a: Ciphertext, c: int) -> Ciphertext:
+        """Add the constant c to every slot.
+
+        The batch encoding of the all-c vector is the constant polynomial c,
+        so only coefficient 0 of c0 moves (by delta*c per limb)."""
+        c %= self.params.t
+        c0 = a.data[0].at[:, 0].add(self.delta * c) % self.qQ[:, None]
+        return Ciphertext(a.data.at[0].set(c0),
+                          self.noise_model.add(a.noise, a.noise), self.params)
+
+    def sub_from_scalar(self, c: int, a: Ciphertext) -> Ciphertext:
+        """Encrypted (c - a) for scalar c."""
+        return self.add_scalar(self.neg(a), c)
+
+    def _mul_plain_impl(self, data, m):
+        q = self.qQ[:, None]
+        m_ntt = self._ntt_q(m[None, :] % q)
+        out0 = self._intt_q(self._ntt_q(data[0]) * m_ntt % q)
+        out1 = self._intt_q(self._ntt_q(data[1]) * m_ntt % q)
+        return jnp.stack([out0, out1])
+
+    # ------------------------------------------------- HPS base conversion
+    @staticmethod
+    def _fbc(x, conv, in_mod, out_mod):
+        """Exact fast base conversion of the centered value of x.
+
+        x: (ka, n) residues mod in_mod; conv: jnp'ed BaseConv tuple;
+        out_mod: (kb,). Products stay < 2^62, exact in int64.
+        """
+        hat_inv, hat_mod_b, a_mod_b, a_inv = conv
+        y = (x * hat_inv[:, None]) % in_mod[:, None]
+        v = jnp.round(jnp.sum(y.astype(jnp.float64) * a_inv[:, None], axis=0)).astype(jnp.int64)
+        terms = (y[:, None, :] * hat_mod_b[:, :, None]) % out_mod[None, :, None]
+        acc = jnp.sum(terms, axis=0)                       # (kb, n) < ka * b_j
+        out = (acc - v[None, :] * a_mod_b[:, None]) % out_mod[:, None]
+        return out
+
+    # ------------------------------------------------------- ct-ct multiply
+    def mul(self, a: Ciphertext, b: Ciphertext, rlk: KSwitchKey) -> Ciphertext:
+        data = self._mul_j(a.data, b.data, rlk.b, rlk.a)
+        nz = self.noise_model
+        return Ciphertext(data, nz.keyswitch(nz.mul(a.noise, b.noise)), self.params)
+
+    def _mul_impl(self, da, db, rlk_b, rlk_a):
+        p = self.params
+        qQ, qP = self.qQ, self.qP
+        # 1. lift to Q ∪ P
+        aP = jnp.stack([self._fbc(da[0], self.c_qp, qQ, qP), self._fbc(da[1], self.c_qp, qQ, qP)])
+        bP = jnp.stack([self._fbc(db[0], self.c_qp, qQ, qP), self._fbc(db[1], self.c_qp, qQ, qP)])
+        # 2. NTT + tensor in both bases
+        nttq = self._ntt_q
+        nttp = lambda x: nttm.ntt_ref(x, self.psiP, qP)
+        inttp = lambda x: nttm.intt_ref(x, self.ipsiP, self.ninvP, qP)
+        fa = [nttq(da[0]), nttq(da[1])]
+        fb = [nttq(db[0]), nttq(db[1])]
+        ga = [nttp(aP[0]), nttp(aP[1])]
+        gb = [nttp(bP[0]), nttp(bP[1])]
+        tq = [
+            self._intt_q(fa[0] * fb[0] % qQ[:, None]),
+            self._intt_q(((fa[0] * fb[1]) % qQ[:, None] + (fa[1] * fb[0]) % qQ[:, None]) % qQ[:, None]),
+            self._intt_q(fa[1] * fb[1] % qQ[:, None]),
+        ]
+        tp = [
+            inttp(ga[0] * gb[0] % qP[:, None]),
+            inttp(((ga[0] * gb[1]) % qP[:, None] + (ga[1] * gb[0]) % qP[:, None]) % qP[:, None]),
+            inttp(gb[1] * ga[1] % qP[:, None]),
+        ]
+        # 3. scale by t/Q exactly: r = (t*E - [tE]_Q) / Q, computed in base P
+        rs = []
+        for eq, ep in zip(tq, tp):
+            rem_q = (eq * p.t) % qQ[:, None]
+            rem_p = self._fbc(rem_q, self.c_qp, qQ, qP)
+            r_p = ((ep * p.t - rem_p) % qP[:, None]) * self.qinv_p[:, None] % qP[:, None]
+            rs.append(self._fbc(r_p, self.c_pq, qP, qQ))       # 4. back to base Q
+        # 5. relinearize r2
+        ks0, ks1 = self._kswitch_inner(rs[2], rlk_b, rlk_a)
+        c0 = (rs[0] + ks0) % qQ[:, None]
+        c1 = (rs[1] + ks1) % qQ[:, None]
+        return jnp.stack([c0, c1])
+
+    # --------------------------------------------------------- key switch
+    def _kswitch_inner(self, poly, ksk_b, ksk_a):
+        """Key-switch `poly` (coeff domain, (k,n)): returns coeff-domain pair."""
+        q = self.qQ[:, None]
+        qvec = self.qQ
+        half = qvec // 2
+        cent = poly - qvec[:, None] * (poly > half[:, None])       # centered digits
+        digits = cent[:, None, :] % qvec[None, :, None]            # (kd, k, n)
+        d_ntt = jax.vmap(lambda d: self._ntt_q(d))(digits)
+        acc_b = jnp.sum(d_ntt * ksk_b % q[None], axis=0) % q
+        acc_a = jnp.sum(d_ntt * ksk_a % q[None], axis=0) % q
+        return self._intt_q(acc_b), self._intt_q(acc_a)
+
+    # ------------------------------------------------------------ rotation
+    def _apply_galois_impl(self, data, g: int):
+        src, sign = self._galois_tabs[g]
+        return (sign[None, None, :] * data[:, :, src]) % self.qQ[None, :, None]
+
+    def apply_galois(self, ct: Ciphertext, g: int, gk: KSwitchKey) -> Ciphertext:
+        rot = self._apply_galois_j(ct.data, g)
+        ks0, ks1 = self._kswitch_inner(rot[1], gk.b, gk.a)
+        c0 = (rot[0] + ks0) % self.qQ[:, None]
+        return Ciphertext(jnp.stack([c0, ks1]), self.noise_model.rotate(ct.noise), self.params)
+
+    def rotate_rows(self, ct: Ciphertext, step: int, gks: dict[int, KSwitchKey]) -> Ciphertext:
+        """Rotate both rows left by `step` (decomposed into power-of-two hops)."""
+        p = self.params
+        step %= p.row
+        out = ct
+        hop = 1
+        while step:
+            if step & 1:
+                g = p.rot_gs[hop]
+                out = self.apply_galois(out, g, gks[g])
+            step >>= 1
+            hop <<= 1
+        return out
+
+    def swap_rows(self, ct: Ciphertext, gks: dict[int, KSwitchKey]) -> Ciphertext:
+        g = self.params.rowswap_g
+        return self.apply_galois(ct, g, gks[g])
+
+    # --------------------------------------------------- slot-level helpers
+    def sum_slots(self, ct: Ciphertext, gks: dict[int, KSwitchKey]) -> Ciphertext:
+        """Rotate-and-add tree: every slot ends up holding the full sum.
+
+        log2(n/2) row rotations + 1 row swap (paper §4.2.2 COUNT/SUM).
+        """
+        out = ct
+        step = 1
+        while step < self.params.row:
+            out = self.add(out, self.rotate_rows(out, step, gks))
+            step *= 2
+        return self.add(out, self.swap_rows(out, gks))
+
+    # ------------------------------------------------------- noise measure
+    def noise_budget_exact(self, ct: Ciphertext, sk: SecretKey) -> float:
+        """Exact invariant-noise budget in bits (host-side bigint; tests)."""
+        p = self.params
+        q = self.qQ[:, None]
+        x = np.asarray((ct.data[0] + self._intt_q(self._ntt_q(ct.data[1]) * sk.s_ntt % q)) % q)
+        m = np.asarray(self._decrypt_j(ct.data, sk.s_ntt))
+        Q = p.bigQ()
+        tQ = p.t * Q
+        worst = 1
+        for j in range(p.n):
+            X = crt_reconstruct([int(x[i, j]) for i in range(p.k)], list(p.Q.primes))
+            w = centered((p.t * X - int(m[j]) * Q) % tQ, tQ)
+            worst = max(worst, abs(w))
+        return math.log2(Q) - 1.0 - math.log2(worst)

@@ -1,0 +1,57 @@
+"""BFV batch encoder: n integer slots per plaintext polynomial.
+
+Slots are the CRT components of R_t = Z_t[X]/(X^n+1) (t prime, 2n | t-1),
+laid out as 2 rows x n/2 columns so that the Galois element 3^r rotates
+rows by r and 2n-1 swaps rows (see params._make_slot_map).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import ntt as nttm
+from .params import HEParams
+
+
+class BatchEncoder:
+    def __init__(self, params: HEParams):
+        self.params = params
+        T = params.T
+        self.qt = jnp.asarray(T.q)
+        self.psi = jnp.asarray(T.psi_rev)
+        self.ipsi = jnp.asarray(T.ipsi_rev)
+        self.ninv = jnp.asarray(T.n_inv)
+        self.slot_to_coeff = jnp.asarray(params.slot_to_coeff)
+        # inverse permutation: coeff index -> slot
+        inv = np.zeros(params.n, dtype=np.int32)
+        inv[np.asarray(params.slot_to_coeff)] = np.arange(params.n)
+        self.coeff_to_slot = jnp.asarray(inv)
+
+    def encode(self, values) -> jnp.ndarray:
+        """values: up to n ints (taken mod t); returns plaintext poly (n,)."""
+        p = self.params
+        vals = jnp.asarray(values, dtype=jnp.int64) % p.t
+        if vals.shape[0] < p.n:
+            vals = jnp.concatenate([vals, jnp.zeros(p.n - vals.shape[0], dtype=jnp.int64)])
+        evals = vals[self.coeff_to_slot][None, :]
+        poly = nttm.intt_ref(evals, self.ipsi, self.ninv, self.qt)
+        return poly[0]
+
+    def decode(self, poly: jnp.ndarray) -> jnp.ndarray:
+        evals = nttm.ntt_ref(poly[None, :], self.psi, self.qt)[0]
+        return evals[self.slot_to_coeff]
+
+    def decode_signed(self, poly: jnp.ndarray) -> jnp.ndarray:
+        """Decode with centered representatives in (-t/2, t/2]."""
+        v = self.decode(poly)
+        t = self.params.t
+        return v - t * (v > t // 2)
+
+    # Common mask plaintexts -------------------------------------------------
+    def constant(self, c: int) -> jnp.ndarray:
+        return self.encode(jnp.full(self.params.n, c, dtype=jnp.int64))
+
+    def basis(self, slot: int) -> jnp.ndarray:
+        """All-zeros except a single 1 at `slot` (the paper's Extract mask)."""
+        v = jnp.zeros(self.params.n, dtype=jnp.int64).at[slot].set(1)
+        return self.encode(v)

@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipeline (checkpointable)."""
+from .pipeline import TokenPipeline  # noqa: F401

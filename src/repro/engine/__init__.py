@@ -1,0 +1,15 @@
+"""repro.engine — NSHEDB's scan-first encrypted query engine.
+
+Layers:
+  backend   duck-typed HE ops: BFVBackend (real ciphertexts) and
+            MockBackend (Z_t arrays + identical noise/op accounting)
+  schema    column types, dictionary encoding, fixed-point decimals
+  storage   encrypted columnar tables (packed ciphertext blocks)
+  ops       physical scan-first operators (masks, aggregates, join, ...)
+  plan      logical plan nodes + the Table-3 depth model
+  planner   noise-aware rewrites R1/R2/R3 + the i* injection cost model
+  tpch      TPC-H datagen + plaintext oracle
+  queries   the paper's nine benchmark queries (Q1,4,5,6,8,12,14,17,19)
+  baseline  HE3DB / ArcEDB cost models for the comparison tables
+"""
+from .backend import BFVBackend, MockBackend, OpStats  # noqa: F401

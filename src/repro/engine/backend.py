@@ -1,0 +1,418 @@
+"""HE execution backends for the query engine.
+
+One operator implementation (engine/ops.py, core/compare.py) runs against
+either backend through the same method surface:
+
+  BFVBackend  — real RNS-BFV ciphertexts (core/bfv.py).  Used by tests and
+                small benchmarks; every op is genuinely homomorphic.
+  MockBackend — plaintext Z_t arrays with *identical* noise accounting,
+                depth tracking and op counting.  Used for full-32K-row
+                TPC-H benchmarks on CPU: the timing model multiplies op
+                counts by per-op costs calibrated on the real backend.
+
+Both count operations in OpStats and track (noise, depth) per value, so
+the planner's predictions are validated against the same model regardless
+of backend.  A `refresh` (the paper's "bootstrapping" event: client-side
+re-encryption in NSHEDB's trust model) triggers automatically whenever an
+op would exhaust the invariant-noise budget — the unoptimized plans pay
+these, the noise-optimized plans are expected to avoid them entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from ..core.bfv import BFVContext, Ciphertext, Keys
+from ..core.encoder import BatchEncoder
+from ..core.noise import NoiseModel, NoiseProfile, paper_profile
+from ..core.params import HEParams
+
+
+@dataclasses.dataclass
+class OpStats:
+    """Homomorphic-operation counters (the engine's "profile")."""
+
+    mul: int = 0            # ct x ct multiply (incl. relinearization)
+    mul_plain: int = 0      # ct x plaintext-vector multiply
+    mul_scalar: int = 0     # ct x constant multiply (no NTT)
+    add: int = 0            # ct +- ct / plain
+    rotate: int = 0         # Galois rotation (incl. key switch)
+    encrypt: int = 0
+    decrypt: int = 0
+    refresh: int = 0        # noise-budget exhaustion events ("bootstraps")
+    max_depth: int = 0      # deepest multiplicative chain observed
+
+    def clone(self) -> "OpStats":
+        return dataclasses.replace(self)
+
+    def merged(self, other: "OpStats") -> "OpStats":
+        out = self.clone()
+        for f in dataclasses.fields(OpStats):
+            if f.name == "max_depth":
+                out.max_depth = max(out.max_depth, other.max_depth)
+            else:
+                setattr(out, f.name, getattr(out, f.name) + getattr(other, f.name))
+        return out
+
+    def cost_seconds(self, costs: dict[str, float]) -> float:
+        """Wall-clock model: sum(count * per-op seconds)."""
+        return sum(getattr(self, k) * v for k, v in costs.items() if hasattr(self, k))
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(OpStats):
+            setattr(self, f.name, 0)
+
+
+class _BackendBase:
+    """Shared bookkeeping: budget checks, refresh policy, stats."""
+
+    def __init__(self) -> None:
+        self.stats = OpStats()
+        self.auto_refresh = True   # refresh (count a bootstrap) on exhaustion
+        self.refresh_log: list[str] = []
+        from collections import Counter
+        self.op_log = Counter()    # operator-level counts (eq/cmp/sum/...)
+
+    # -- subclass must provide -------------------------------------------
+    t: int
+    slots: int
+    model: NoiseModel
+
+    def _budget(self, noise: float) -> float:
+        return self.model.budget(noise)
+
+    def _maybe_refresh(self, ct, post_noise: float, what: str):
+        """If the upcoming op would exhaust the budget, refresh `ct` first.
+
+        Refreshes mutate the ciphertext IN PLACE: every plan-DAG edge that
+        still references this value sees the refreshed version, exactly as
+        a real engine bootstraps a value once (not per consumer)."""
+        if self._budget(post_noise) > 0:
+            return ct
+        if not self.auto_refresh:
+            raise RuntimeError(
+                f"noise budget exhausted in {what} "
+                f"(post-op budget {self._budget(post_noise):.1f} bits)")
+        self.stats.refresh += 1
+        self.refresh_log.append(what)
+        self.refresh_inplace(ct)
+        return ct
+
+    def _track_depth(self, d: int) -> int:
+        self.stats.max_depth = max(self.stats.max_depth, d)
+        return d
+
+    def levels_left(self, ct) -> int:
+        noise = ct.noise if hasattr(ct, "noise") else ct
+        return self.model.levels_left(noise)
+
+    def ensure_levels(self, ct, levels: int):
+        """Planned refresh (§2.1.1 'selectively apply bootstrapping'): if
+        the ciphertext cannot absorb `levels` more multiplications, refresh
+        it *once* here rather than thrashing mid-circuit."""
+        if self.levels_left(ct) >= levels:
+            return ct
+        self.stats.refresh += 1
+        self.refresh_log.append(f"planned(levels={levels})")
+        self.refresh_inplace(ct)
+        return ct
+
+    # convenience aliases used by compare.py ------------------------------
+    def sub_scalar(self, a, c: int):
+        return self.add_scalar(a, -c % self.t)
+
+
+# ---------------------------------------------------------------------------
+# Real-ciphertext backend.
+# ---------------------------------------------------------------------------
+
+class BFVBackend(_BackendBase):
+    def __init__(self, params: HEParams, seed: int = 0):
+        super().__init__()
+        self.params = params
+        self.t = params.t
+        self.slots = params.n
+        self.ctx = BFVContext(params, seed=seed)
+        self.keys: Keys = self.ctx.keygen()
+        self.enc = BatchEncoder(params)
+        self.model = self.ctx.noise_model
+        self._depth: dict[int, int] = {}
+
+    # -- depth side-table (Ciphertext is a frozen-ish dataclass) ----------
+    def _d(self, ct: Ciphertext) -> int:
+        return self._depth.get(id(ct), 0)
+
+    def _set_d(self, ct: Ciphertext, d: int) -> Ciphertext:
+        self._depth[id(ct)] = self._track_depth(d)
+        return ct
+
+    # -- io ----------------------------------------------------------------
+    def encrypt(self, vec) -> Ciphertext:
+        self.stats.encrypt += 1
+        v = np.zeros(self.slots, dtype=np.int64)
+        arr = np.asarray(vec, dtype=np.int64) % self.t
+        v[: len(arr)] = arr
+        return self._set_d(self.ctx.encrypt(self.enc.encode(v), self.keys.pk), 0)
+
+    def decrypt(self, ct: Ciphertext) -> np.ndarray:
+        self.stats.decrypt += 1
+        return np.asarray(self.enc.decode(self.ctx.decrypt(ct, self.keys.sk)))
+
+    def refresh(self, ct: Ciphertext) -> Ciphertext:
+        """Client-side re-encryption (NSHEDB's trust model allows it; the
+        engine's planner exists to make sure this is never reached)."""
+        return self.encrypt(self.decrypt(ct))
+
+    def refresh_inplace(self, ct: Ciphertext) -> None:
+        fresh = self.refresh(ct)
+        ct.data = fresh.data
+        ct.noise = fresh.noise
+        self._depth[id(ct)] = 0
+
+    def budget(self, ct: Ciphertext) -> float:
+        return ct.budget
+
+    def depth(self, ct: Ciphertext) -> int:
+        return self._d(ct)
+
+    # -- ring ops ------------------------------------------------------------
+    def add(self, a, b):
+        self.stats.add += 1
+        return self._set_d(self.ctx.add(a, b), max(self._d(a), self._d(b)))
+
+    def sub(self, a, b):
+        self.stats.add += 1
+        return self._set_d(self.ctx.sub(a, b), max(self._d(a), self._d(b)))
+
+    def neg(self, a):
+        return self._set_d(self.ctx.neg(a), self._d(a))
+
+    def mul(self, a, b):
+        post = self.model.keyswitch(self.model.mul(a.noise, b.noise))
+        if self._budget(post) <= 0:
+            a = self._maybe_refresh(a, post, "mul")
+            b = self._maybe_refresh(b, self.model.keyswitch(
+                self.model.mul(a.noise, b.noise)), "mul")
+        self.stats.mul += 1
+        out = self.ctx.mul(a, b, self.keys.rlk)
+        return self._set_d(out, max(self._d(a), self._d(b)) + 1)
+
+    def mul_plain(self, a, vec):
+        post = self.model.mul_plain(a.noise)
+        a = self._maybe_refresh(a, post, "mul_plain")
+        self.stats.mul_plain += 1
+        poly = self.enc.encode(np.asarray(vec, dtype=np.int64) % self.t)
+        return self._set_d(self.ctx.mul_plain(a, poly), self._d(a) + 1)
+
+    def add_plain(self, a, vec):
+        self.stats.add += 1
+        poly = self.enc.encode(np.asarray(vec, dtype=np.int64) % self.t)
+        return self._set_d(self.ctx.add_plain(a, poly), self._d(a))
+
+    def mul_scalar(self, a, c: int):
+        self.stats.mul_scalar += 1
+        return self._set_d(self.ctx.mul_scalar(a, c), self._d(a))
+
+    def add_scalar(self, a, c: int):
+        self.stats.add += 1
+        return self._set_d(self.ctx.add_scalar(a, c), self._d(a))
+
+    def sub_from_scalar(self, c: int, a):
+        self.stats.add += 1
+        return self._set_d(self.ctx.sub_from_scalar(c, a), self._d(a))
+
+    def dot_plain(self, cts: list, coeffs) -> Ciphertext:
+        """sum_i coeffs[i] * cts[i] — the BSGS baby-step inner product.
+        Same accounting as len(cts) mul_scalar + adds."""
+        acc = None
+        for ct, c in zip(cts, coeffs):
+            c = int(c) % self.t
+            if c == 0:
+                continue
+            term = self.mul_scalar(ct, c)
+            acc = term if acc is None else self.add(acc, term)
+        assert acc is not None
+        return acc
+
+    # -- data movement ---------------------------------------------------
+    def rotate(self, a, step: int):
+        """Rotate rows (2 x n/2 layout) left by step."""
+        self.stats.rotate += bin(step % (self.slots // 2)).count("1")
+        return self._set_d(self.ctx.rotate_rows(a, step, self.keys.gks), self._d(a))
+
+    def swap_rows(self, a):
+        self.stats.rotate += 1
+        return self._set_d(self.ctx.swap_rows(a, self.keys.gks), self._d(a))
+
+    def sum_slots(self, a):
+        """All slots <- total sum (log2(n) rotate+add, paper §4.2.2)."""
+        out = a
+        step = 1
+        while step < self.slots // 2:
+            out = self.add(out, self.rotate(out, step))
+            step *= 2
+        return self.add(out, self.swap_rows(out))
+
+    def broadcast_slot(self, a, i: int):
+        """Extract slot i then replicate everywhere (paper §2.1.6)."""
+        basis = np.zeros(self.slots, dtype=np.int64)
+        basis[i] = 1
+        return self.sum_slots(self.mul_plain(a, basis))
+
+
+# ---------------------------------------------------------------------------
+# Mock backend: Z_t arrays, same accounting.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MockCipher:
+    vec: np.ndarray          # (slots,) int64 in [0, t)
+    noise: float             # analytic log2 |invariant noise|
+    depth: int = 0
+
+    def __post_init__(self):
+        self.vec = np.asarray(self.vec, dtype=np.int64)
+
+
+class MockBackend(_BackendBase):
+    """Executes the operator DAG on plaintext arrays mod t while charging
+    the exact same noise/ops as the BFV path.  The paper-scale profile
+    (n=32768, k=30 limbs) is the default."""
+
+    def __init__(self, profile: NoiseProfile | None = None):
+        super().__init__()
+        self.profile = profile or paper_profile()
+        self.t = self.profile.t
+        self.slots = self.profile.n
+        self.model = NoiseModel(self.profile)
+
+    # -- io ----------------------------------------------------------------
+    def encrypt(self, vec) -> MockCipher:
+        self.stats.encrypt += 1
+        v = np.zeros(self.slots, dtype=np.int64)
+        arr = np.asarray(vec, dtype=np.int64) % self.t
+        v[: len(arr)] = arr
+        return MockCipher(v, self.model.fresh(), 0)
+
+    def decrypt(self, ct: MockCipher) -> np.ndarray:
+        self.stats.decrypt += 1
+        return ct.vec.copy()
+
+    def refresh(self, ct: MockCipher) -> MockCipher:
+        return MockCipher(ct.vec.copy(), self.model.fresh(), 0)
+
+    def refresh_inplace(self, ct: MockCipher) -> None:
+        ct.noise = self.model.fresh()
+        ct.depth = 0
+
+    def budget(self, ct: MockCipher) -> float:
+        return self.model.budget(ct.noise)
+
+    def depth(self, ct: MockCipher) -> int:
+        return ct.depth
+
+    # -- ring ops ------------------------------------------------------------
+    def add(self, a, b):
+        self.stats.add += 1
+        return MockCipher((a.vec + b.vec) % self.t,
+                          self.model.add(a.noise, b.noise),
+                          self._track_depth(max(a.depth, b.depth)))
+
+    def sub(self, a, b):
+        self.stats.add += 1
+        return MockCipher((a.vec - b.vec) % self.t,
+                          self.model.add(a.noise, b.noise),
+                          self._track_depth(max(a.depth, b.depth)))
+
+    def neg(self, a):
+        return MockCipher((-a.vec) % self.t, a.noise, a.depth)
+
+    def mul(self, a, b):
+        post = self.model.keyswitch(self.model.mul(a.noise, b.noise))
+        if self._budget(post) <= 0:
+            a = self._maybe_refresh(a, post, "mul")
+            b = self._maybe_refresh(
+                b, self.model.keyswitch(self.model.mul(a.noise, b.noise)), "mul")
+        self.stats.mul += 1
+        return MockCipher((a.vec * b.vec) % self.t,
+                          self.model.keyswitch(self.model.mul(a.noise, b.noise)),
+                          self._track_depth(max(a.depth, b.depth) + 1))
+
+    def mul_plain(self, a, vec):
+        a = self._maybe_refresh(a, self.model.mul_plain(a.noise), "mul_plain")
+        self.stats.mul_plain += 1
+        v = np.zeros(self.slots, dtype=np.int64)
+        arr = np.asarray(vec, dtype=np.int64) % self.t
+        v[: len(arr)] = arr
+        return MockCipher((a.vec * v) % self.t, self.model.mul_plain(a.noise),
+                          self._track_depth(a.depth + 1))
+
+    def add_plain(self, a, vec):
+        self.stats.add += 1
+        v = np.zeros(self.slots, dtype=np.int64)
+        arr = np.asarray(vec, dtype=np.int64) % self.t
+        v[: len(arr)] = arr
+        return MockCipher((a.vec + v) % self.t, self.model.add(a.noise, a.noise), a.depth)
+
+    def mul_scalar(self, a, c: int):
+        self.stats.mul_scalar += 1
+        return MockCipher((a.vec * (c % self.t)) % self.t,
+                          self.model.mul_scalar(a.noise, c), a.depth)
+
+    def add_scalar(self, a, c: int):
+        self.stats.add += 1
+        return MockCipher((a.vec + c) % self.t,
+                          self.model.add(a.noise, a.noise), a.depth)
+
+    def sub_from_scalar(self, c: int, a):
+        self.stats.add += 1
+        return MockCipher((c - a.vec) % self.t,
+                          self.model.add(a.noise, a.noise), a.depth)
+
+    def dot_plain(self, cts: list, coeffs) -> MockCipher:
+        """Vectorized sum_i coeffs[i]*cts[i]; charged as the equivalent
+        mul_scalar/add sequence so op counts stay backend-independent."""
+        cs = np.asarray(coeffs, dtype=np.int64) % self.t
+        nz = [i for i in range(len(cts)) if cs[i] != 0]
+        assert nz, "all-zero dot"
+        self.stats.mul_scalar += len(nz)
+        self.stats.add += max(0, len(nz) - 1)
+        out = np.zeros(self.slots, dtype=np.int64)
+        for i in nz:                       # in-place FMA; products < 2^34,
+            out += cts[i].vec * cs[i]      # sums < 2^34 * 2^15 — exact int64
+        out %= self.t
+        noises = [self.model.mul_scalar(cts[i].noise, int(cs[i])) for i in nz]
+        depth = max(cts[i].depth for i in nz)
+        return MockCipher(out, self.model.add_many(noises), self._track_depth(depth))
+
+    # -- data movement ---------------------------------------------------
+    def rotate(self, a, step: int):
+        """Row-rotation semantics matching the BFV 2 x n/2 slot layout."""
+        self.stats.rotate += bin(step % (self.slots // 2)).count("1")
+        half = self.slots // 2
+        vec = np.concatenate([np.roll(a.vec[:half], -step), np.roll(a.vec[half:], -step)])
+        return MockCipher(vec, self.model.rotate(a.noise), a.depth)
+
+    def swap_rows(self, a):
+        self.stats.rotate += 1
+        half = self.slots // 2
+        vec = np.concatenate([a.vec[half:], a.vec[:half]])
+        return MockCipher(vec, self.model.rotate(a.noise), a.depth)
+
+    def sum_slots(self, a):
+        out = a
+        step = 1
+        while step < self.slots // 2:
+            out = self.add(out, self.rotate(out, step))
+            step *= 2
+        return self.add(out, self.swap_rows(out))
+
+    def broadcast_slot(self, a, i: int):
+        basis = np.zeros(self.slots, dtype=np.int64)
+        basis[i] = 1
+        return self.sum_slots(self.mul_plain(a, basis))
+
+
+Backend = Any  # duck type: BFVBackend | MockBackend

@@ -1,0 +1,328 @@
+"""Physical scan-first operators (paper §4.2).
+
+Every operator maps over the ciphertext blocks of a column — there is no
+positional access (Table 1).  All functions take the backend `bk` first
+and work identically on BFVBackend and MockBackend.
+
+Masks are lists of blocks of encrypted {0,1}; aggregates are single
+ciphertexts with the result replicated in every slot (the paper's
+fixed-size output leakage).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import compare as cmp
+from .plan import Factor, Pred
+from .storage import EncryptedColumn, EncryptedTable
+
+
+# ---------------------------------------------------------------------------
+# Predicate masks.
+# ---------------------------------------------------------------------------
+
+def _scalar_cmp(bk, ct, op: str, v) -> object:
+    if op == "=":
+        return cmp.eq_scalar(bk, ct, v)
+    if op == "!=":
+        return cmp.not_(bk, cmp.eq_scalar(bk, ct, v))
+    if op == "<":
+        return cmp.lt_scalar(bk, ct, v)
+    if op == ">":
+        return cmp.gt_scalar(bk, ct, v)
+    if op == "<=":
+        return cmp.le_scalar(bk, ct, v)
+    if op == ">=":
+        return cmp.ge_scalar(bk, ct, v)
+    if op == "between":
+        lo, hi = v
+        return cmp.between_scalar(bk, ct, lo, hi)
+    if op == "in":
+        if not v:
+            return bk.mul_scalar(ct, 0)    # empty set: all-zero mask
+        return cmp.in_set(bk, ct, v)
+    raise ValueError(op)
+
+
+def _col_cmp(bk, ct_l, op: str, ct_r) -> object:
+    z = bk.sub(ct_l, ct_r)
+    if op == "=":
+        return cmp.eq_zero(bk, z)
+    if op == "!=":
+        return cmp.not_(bk, cmp.eq_zero(bk, z))
+    if op == "<":
+        return cmp.lt_zero(bk, z)
+    if op == ">":
+        return cmp.lt_zero(bk, bk.neg(z))
+    if op == "<=":
+        return cmp.not_(bk, cmp.lt_zero(bk, bk.neg(z)))
+    if op == ">=":
+        return cmp.not_(bk, cmp.lt_zero(bk, z))
+    raise ValueError(op)
+
+
+def pred_mask(bk, table: EncryptedTable, pred: Pred, col_override=None) -> list:
+    """Evaluate one predicate over every block of its column(s).
+
+    col_override substitutes pre-masked blocks (the unoptimized pipeline
+    evaluates comparisons on filtered columns — that is the point)."""
+    col = table.col(pred.col)
+    blocks = col_override if col_override is not None else col.blocks
+    if pred.rhs_col is not None:
+        rhs = table.col(pred.rhs_col).blocks
+        return [_col_cmp(bk, a, pred.op, b) for a, b in zip(blocks, rhs)]
+    spec = col.spec
+    if pred.op == "between":
+        v = (spec.encode_scalar(pred.value[0]), spec.encode_scalar(pred.value[1]))
+    elif pred.op == "in":
+        v = [spec.encode_scalar(x) for x in pred.value]
+    else:
+        v = spec.encode_scalar(pred.value)
+    return [_scalar_cmp(bk, ct, pred.op, v) for ct in blocks]
+
+
+# ---------------------------------------------------------------------------
+# Mask algebra (blockwise).
+# ---------------------------------------------------------------------------
+
+def and_masks(bk, masks: list[list]) -> list:
+    """Balanced product tree per block (R2 / §4.3.1)."""
+    nblocks = len(masks[0])
+    return [cmp.mul_tree(bk, [m[b] for m in masks]) for b in range(nblocks)]
+
+
+def and_masks_seq(bk, masks: list[list]) -> list:
+    """Sequential chain — the unoptimized baseline."""
+    out = masks[0]
+    for m in masks[1:]:
+        out = [bk.mul(a, b) for a, b in zip(out, m)]
+    return out
+
+
+def or_masks(bk, masks: list[list]) -> list:
+    nblocks = len(masks[0])
+    out = []
+    for b in range(nblocks):
+        layer = [m[b] for m in masks]
+        while len(layer) > 1:
+            nxt = [cmp.or_(bk, layer[i], layer[i + 1]) for i in range(0, len(layer) - 1, 2)]
+            if len(layer) % 2:
+                nxt.append(layer[-1])
+            layer = nxt
+        out.append(layer[0])
+    return out
+
+
+def not_mask(bk, mask: list) -> list:
+    return [cmp.not_(bk, m) for m in mask]
+
+
+def apply_validity(bk, mask: list, table: EncryptedTable) -> list:
+    """Zero out the padding slots of the last block (plaintext multiply —
+    row counts are public metadata)."""
+    out = list(mask)
+    v = table.validity(table.nblocks - 1)
+    if v is not None:
+        out[-1] = bk.mul_plain(out[-1], v)
+    return out
+
+
+def mask_columns(bk, blocks: list, mask: list) -> list:
+    """Filter a column: col x mask (the SELECT of Eq. 5)."""
+    return [bk.mul(c, m) for c, m in zip(blocks, mask)]
+
+
+# ---------------------------------------------------------------------------
+# Aggregation (paper §4.2.2).
+# ---------------------------------------------------------------------------
+
+def expr_blocks(bk, table: EncryptedTable, factors: tuple, masked: dict | None = None) -> list:
+    """Product of affine column factors: prod_f (f.add + f.mult * col_f)."""
+    assert factors
+    per_factor = []
+    for f in factors:
+        src = (masked or {}).get(f.col) if masked else None
+        blocks = src if src is not None else table.col(f.col).blocks
+        cur = []
+        for ct in blocks:
+            x = ct
+            if f.mult != 1:
+                x = bk.mul_scalar(x, f.mult)
+            if f.add != 0:
+                x = bk.add_scalar(x, f.add)
+            cur.append(x)
+        per_factor.append(cur)
+    out = per_factor[0]
+    for nxt in per_factor[1:]:
+        out = [bk.mul(a, b) for a, b in zip(out, nxt)]
+    return out
+
+
+def reduce_blocks(bk, blocks: list) -> object:
+    """Sum across blocks then rotate-reduce within the ciphertext: the
+    doubling pattern of §4.2.2 COUNT/SUM — result in every slot."""
+    acc = blocks[0]
+    for b in blocks[1:]:
+        acc = bk.add(acc, b)
+    return bk.sum_slots(acc)
+
+
+def masked_sum(bk, value_blocks: list, mask: list) -> object:
+    bk.op_log["sum"] += 1
+    return reduce_blocks(bk, mask_columns(bk, value_blocks, mask))
+
+
+def count(bk, mask: list) -> object:
+    bk.op_log["count"] += 1
+    return reduce_blocks(bk, mask)
+
+
+def partial_sums(bk, value_blocks: list, mask: list, chunk: int) -> list:
+    """Exact-sum variant (beyond-paper): stop the rotate-reduce early so
+    each ciphertext carries n/chunk partial sums that the client combines
+    exactly — avoids mod-t wraparound for big aggregates at *fewer*
+    rotations than the full reduction."""
+    filtered = mask_columns(bk, value_blocks, mask)
+    outs = []
+    for ct in filtered:
+        out = ct
+        step = 1
+        while step < chunk:
+            out = bk.add(out, bk.rotate(out, step))
+            step *= 2
+        outs.append(out)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Join / group-by machinery (paper §4.2.2, Fig. 2).
+# ---------------------------------------------------------------------------
+
+def group_masks(bk, table: EncryptedTable, col: str, domain: list[int]) -> list[tuple[int, list]]:
+    """One EQ mask per distinct value — GROUP BY (§4.2.2) and ORDER BY
+    (§4.2.3, enumerate the dictionary in order)."""
+    blocks = table.col(col).blocks
+    return [(v, [cmp.eq_scalar(bk, ct, int(v)) for ct in blocks]) for v in domain]
+
+
+def sort_column(bk, table: EncryptedTable, col: str, domain: list[int],
+                descending: bool = False):
+    """Homomorphic ORDER BY (§4.2.3): reconstruct the column as an
+    encrypted *sorted sequence*, scanning the domain in order.
+
+    For each value v (ascending): its encrypted count c_v places |c_v|
+    copies of v at slots [P_{v-1}, P_v) where P is the running prefix sum
+    — realized as plaintext-slot-index comparisons against the encrypted
+    prefix:  slot i holds v  iff  P_{v-1} <= i < P_v.  Fixed |D| domain
+    iterations regardless of data (the §3 leakage argument: value
+    frequencies stay hidden inside the comparisons).
+
+    Cost: |D| x (1 EQ + aggregation + 2 comparisons) — Table 2's
+    O(|D| * n/S) scan behaviour.  Single-block columns only (the paper's
+    32K-row setting)."""
+    assert table.nblocks == 1, "sort_column: single-block reconstruction"
+    S = bk.slots
+    idx = np.arange(S, dtype=np.int64)        # plaintext slot indices 0..S-1
+    order = sorted(domain, reverse=descending)
+    prefix = None                             # encrypted running count
+    out = None
+    for v in order:
+        mask = [cmp.eq_scalar(bk, ct, int(v)) for ct in table.col(col).blocks]
+        mask = apply_validity(bk, mask, table)
+        c_v = count(bk, mask)                 # count in every slot
+        new_prefix = c_v if prefix is None else bk.add(prefix, c_v)
+        # prefix sits ~eq_depth deep and each placement costs ~lt_depth
+        # more: planned refresh (i* infeasible branch), once per value.
+        new_prefix = bk.ensure_levels(new_prefix, _eqd(bk.t) + 4)
+        # slot i gets v  iff  prefix_{v-1} <= i  AND  i < prefix_v
+        # i < P  <=>  0 < P - i  <=>  GT(P - i, 0); P-i in centered range.
+        lo_ok = (cmp.not_(bk, cmp.lt_zero(bk, bk.add_plain(bk.neg(prefix), idx)))
+                 if prefix is not None else None)   # i >= P_{v-1}
+        hi_ct = bk.add_plain(bk.neg(new_prefix), idx)       # i - P_v
+        hi_ok = cmp.lt_zero(bk, hi_ct)                      # i < P_v
+        pos = hi_ok if lo_ok is None else bk.mul(lo_ok, hi_ok)
+        term = bk.mul_scalar(pos, int(v))
+        out = term if out is None else bk.add(out, term)
+        prefix = new_prefix
+    return out
+
+
+def fk_masks(bk, table: EncryptedTable, fk: str, nparent: int) -> list[list]:
+    """EQ masks for every dense parent key 1..nparent (JOIN step 2)."""
+    blocks = table.col(fk).blocks
+    return [[cmp.eq_scalar(bk, ct, j + 1) for ct in blocks] for j in range(nparent)]
+
+
+def pack_scalars(bk, scalar_cts: list) -> object:
+    """Pack per-key scalar ciphertexts (value in every slot) into one
+    ciphertext with value j at slot j: sum_j ct_j x basis_j."""
+    S = bk.slots
+    acc = None
+    for j, ct in enumerate(scalar_cts):
+        basis = np.zeros(S, dtype=np.int64)
+        basis[j] = 1
+        term = bk.mul_plain(ct, basis)
+        acc = term if acc is None else bk.add(acc, term)
+    return acc
+
+
+from .plan import eq_depth as _eqd
+
+
+def translate_mask_down(bk, parent_mask_block, fact_table: EncryptedTable,
+                        fk: str, nparent: int, fk_override: list | None = None) -> list:
+    """Push a parent-row mask through an FK: child_mask[r] =
+    parent_mask[key(r)].  Per parent key: Extract+Broadcast the mask bit,
+    EQ the fk column, multiply, accumulate (Fig. 2 steps 1-3).
+    Cost O(nparent * nblocks) ops — Table 2's JOIN row.
+
+    The parent mask is refreshed *once* here if it cannot absorb the hop
+    (planned, not per-key: the i* model's pay-one-bootstrap branch).
+
+    fk_override substitutes pre-masked fk blocks: the unoptimized pipeline
+    joins over already-filtered columns (Fig. 3(a)'s deep chains)."""
+    parent_mask_block = bk.ensure_levels(parent_mask_block, 6)
+    fact_blocks = fk_override if fk_override is not None else fact_table.col(fk).blocks
+    out = [None] * len(fact_blocks)
+    for j in range(nparent):
+        mj = bk.broadcast_slot(parent_mask_block, j)          # encrypted bit
+        for b, fct in enumerate(fact_blocks):
+            e = cmp.eq_scalar(bk, fct, j + 1)
+            term = bk.mul(e, mj)
+            out[b] = term if out[b] is None else bk.add(out[b], term)
+    return out
+
+
+def translate_values_down(bk, packed_values, fact_table: EncryptedTable,
+                          fk: str, nparent: int) -> list:
+    """Pull per-parent values (packed: value_j at slot j) down to child
+    rows: child_val[r] = value[key(r)].  Used by correlated subqueries
+    (Q17's per-part AVG)."""
+    packed_values = bk.ensure_levels(packed_values, 6)
+    fact_blocks = fact_table.col(fk).blocks
+    out = [None] * len(fact_blocks)
+    for j in range(nparent):
+        vj = bk.broadcast_slot(packed_values, j)
+        for b, fct in enumerate(fact_blocks):
+            e = cmp.eq_scalar(bk, fct, j + 1)
+            term = bk.mul(e, vj)
+            out[b] = term if out[b] is None else bk.add(out[b], term)
+    return out
+
+
+def join_aggregate(bk, fact_table: EncryptedTable, fk: str, nparent: int,
+                   value_blocks: list | None, extra_mask: list | None = None) -> list:
+    """Fused JOIN+aggregate (the paper's memory optimization): for each
+    parent key j return SUM(value | fk = j [and mask]) — |P| scalar
+    ciphertexts, never materializing the joined table."""
+    results = []
+    masks = fk_masks(bk, fact_table, fk, nparent)
+    for j in range(nparent):
+        m = masks[j]
+        if extra_mask is not None:
+            m = [bk.mul(a, b) for a, b in zip(m, extra_mask)]
+        if value_blocks is None:
+            results.append(count(bk, m))
+        else:
+            results.append(masked_sum(bk, value_blocks, m))
+    return results

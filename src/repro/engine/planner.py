@@ -1,0 +1,197 @@
+"""Noise-sensitive query optimization (paper §4.3).
+
+The planner's job is to keep every multiplication chain inside the noise
+budget B (levels) so the engine never refreshes.  It implements the three
+rewrites of §4.3.2 and exposes the same building blocks in two regimes:
+
+  optimized   R1 mask isolation: every predicate is evaluated against the
+              *original* columns into its own mask subgraph.
+              R2 independent evaluation: conjunctions become balanced
+              product trees (depth max+log k instead of max+k-1).
+              R3 late injection: the combined mask is multiplied into the
+              plan exactly once, at the deepest point that still fits the
+              budget (the i* rule below).
+
+  unoptimized the classical pipeline: predicate pushdown multiplies masks
+              into columns immediately, so later comparisons run on
+              deepened inputs and chains add up — exactly the Fig. 3(a)
+              behaviour whose depth is m stages x d_s each.
+
+Cost-and-decision model (§4.3.2): for a fragment of m stages of per-stage
+depth d_s, injecting the mask after stage i leaves depth D_i = (m-i)*d_s
+on top of the mask and costs i extra mask multiplications:
+
+    Cost(i) = (m-i)*C_mul + i*C_mul + [D_i > B] * C_boot
+    i*      = max{ i : D_i <= B }   if feasible else m (pay one refresh)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from ..core import compare as cmp
+from . import ops
+from .plan import And, Not, Or, Pred, QueryPlan, child_depth, eq_depth
+from .storage import Database, EncryptedTable
+
+
+def noise_budget_levels(bk) -> int:
+    """How many sequential ct-ct multiplications a fresh ciphertext
+    supports under this backend's parameters — B_noise in levels."""
+    m = bk.model
+    v = m.fresh()
+    d = 0
+    while True:
+        v2 = m.keyswitch(m.mul(v, v))
+        if m.budget(v2) <= 0:
+            return d
+        v, d = v2, d + 1
+
+
+def injection_depth(m_stages: int, d_s: int, budget: int) -> int:
+    """i* from the §4.3.2 cost model."""
+    for i in range(m_stages + 1):
+        if (m_stages - i) * d_s <= budget:
+            return i
+    return m_stages
+
+
+@dataclasses.dataclass
+class PlanReport:
+    name: str
+    optimized: bool
+    predicted_depth: int
+    budget_levels: int
+    predicted_refreshes: int
+
+    @property
+    def fits(self) -> bool:
+        return self.predicted_depth <= self.budget_levels
+
+
+class Planner:
+    def __init__(self, db: Database, optimized: bool = True):
+        self.db = db
+        self.bk = db.bk
+        self.optimized = optimized
+        self.budget_levels = noise_budget_levels(self.bk)
+
+    # ------------------------------------------------------------- report
+    def report(self, plan: QueryPlan) -> PlanReport:
+        t = self.bk.t
+        d = plan.total_depth(t, self.optimized)
+        boots = 0 if d <= self.budget_levels else math.ceil(
+            (d - self.budget_levels) / max(self.budget_levels, 1))
+        return PlanReport(plan.name, self.optimized, d, self.budget_levels, boots)
+
+    # ------------------------------------------------- mask construction
+    def where_mask(self, table: EncryptedTable, expr) -> list:
+        """Evaluate a MaskExpr tree into one mask per block."""
+        if self.optimized:
+            return self._mask_opt(table, expr)
+        return self._mask_seq(table, expr)
+
+    def _mask_opt(self, table, expr) -> list:
+        bk = self.bk
+        if isinstance(expr, Pred):
+            return ops.pred_mask(bk, table, expr)
+        if isinstance(expr, Not):
+            return ops.not_mask(bk, self._mask_opt(table, expr.child))
+        kids = [self._mask_opt(table, c) for c in expr.children]
+        if isinstance(expr, And):
+            return ops.and_masks(bk, kids)          # R2: balanced tree
+        return ops.or_masks(bk, kids)
+
+    def _mask_seq(self, table, expr) -> list:
+        """Unoptimized: classical pipeline semantics.  Conjunctions chain
+        sequentially (depth max + k - 1 instead of max + log k); the far
+        deeper pushdown penalty — joins running over already-masked
+        columns, Fig. 3(a)'s 3*log(p-1) chains — lives in the unoptimized
+        branches of the query bodies (translate-after-filter)."""
+        bk = self.bk
+        if isinstance(expr, Pred):
+            return ops.pred_mask(bk, table, expr)
+        if isinstance(expr, Not):
+            return ops.not_mask(bk, self._mask_seq(table, expr.child))
+        kids = [self._mask_seq(table, c) for c in expr.children]
+        out = kids[0]
+        for m in kids[1:]:
+            if isinstance(expr, Or):
+                out = [cmp.or_(bk, a, b) for a, b in zip(out, m)]
+            else:
+                out = [bk.mul(a, b) for a, b in zip(out, m)]
+        return out
+
+    # ------------------------------------------------------- aggregation
+    def aggregate(self, table: EncryptedTable, agg, mask: list | None):
+        """SUM/COUNT/AVG with R3 late injection in the optimized regime:
+        the mask meets the fully-formed expression exactly once, at the
+        aggregation input."""
+        bk = self.bk
+        if mask is not None:
+            mask = ops.apply_validity(bk, mask, table)
+        if agg.kind == "count":
+            assert mask is not None
+            return ops.count(bk, mask)
+        if self.optimized or mask is None:
+            vals = ops.expr_blocks(bk, table, agg.factors)
+            if mask is None:
+                v = table.validity(table.nblocks - 1)
+                if v is not None:
+                    vals = vals[:-1] + [bk.mul_plain(vals[-1], v)]
+                return ops.reduce_blocks(bk, vals)
+            if agg.kind == "avg":
+                return (ops.masked_sum(bk, vals, mask), ops.count(bk, mask))
+            return ops.masked_sum(bk, vals, mask)
+        # Unoptimized: mask every column first, then form the expression
+        # on filtered inputs (pushdown).
+        masked = {
+            f.col: ops.mask_columns(bk, table.col(f.col).blocks, mask)
+            for f in agg.factors if f.col is not None
+        }
+        vals = ops.expr_blocks(bk, table, agg.factors, masked=masked)
+        if agg.kind == "avg":
+            return (ops.reduce_blocks(bk, vals), ops.count(bk, mask))
+        return ops.reduce_blocks(bk, vals)
+
+    # ------------------------------------------------------------- joins
+    def semi_join_mask(self, hop, parent_mask_block) -> list:
+        """Translate a parent-row mask to the child through hop.fk."""
+        child = self.db.tables[hop.child]
+        nparent = self.db.tables[hop.parent].nrows
+        return ops.translate_mask_down(self.bk, parent_mask_block, child, hop.fk, nparent)
+
+    def group_aggregate(self, table: EncryptedTable, group_col: str, domain,
+                        aggs, mask: list | None):
+        """GROUP BY: one EQ mask per group value, combined with the WHERE
+        mask (optimized: one balanced multiply; unoptimized: the group EQ
+        is evaluated on masked columns)."""
+        bk = self.bk
+        results = {}
+        if mask is not None:
+            mask = ops.apply_validity(bk, mask, table)
+        for v, gmask in ops.group_masks(bk, table, group_col, domain):
+            if mask is None:
+                total = gmask if mask is None else None
+                m = gmask
+            elif self.optimized:
+                m = [bk.mul(a, b) for a, b in zip(gmask, mask)]
+            else:
+                col = table.col(group_col)
+                filtered = ops.mask_columns(bk, col.blocks, mask)
+                gm = [cmp.eq_scalar(bk, ct, int(v)) for ct in filtered]
+                m = [bk.mul(a, b) for a, b in zip(gm, mask)]
+            row = {}
+            for agg in aggs:
+                row[agg.name] = self._agg_with_mask(table, agg, m)
+            results[v] = row
+        return results
+
+    def _agg_with_mask(self, table, agg, m):
+        bk = self.bk
+        if agg.kind == "count":
+            return ops.count(bk, m)
+        vals = ops.expr_blocks(bk, table, agg.factors)
+        if agg.kind == "avg":
+            return (ops.masked_sum(bk, vals, m), ops.count(bk, m))
+        return ops.masked_sum(bk, vals, m)

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Each kernel directory ships three files:
+  <name>.py   the pl.pallas_call kernel with explicit BlockSpec VMEM tiling
+  ops.py      the jit'd public wrapper (interpret=True on CPU)
+  ref.py      the pure-jnp oracle the tests assert against
+
+Hardware adaptation (see DESIGN.md §3): Pallas TPU has no 64-bit integer
+ALU, so all modular arithmetic uses uint32 lanes with 16-bit limb
+splitting — Shoup multiplication for known twiddles (NTT) and Barrett
+reduction for ciphertext-ciphertext products (modops).  The MXU is
+float-only; the NTT stays on the VPU with exact integer ops.
+
+Kernels:
+  ntt            negacyclic NTT, whole polynomial VMEM-resident, radix-2
+                 stages in-kernel, grid over (batch x limb)
+  modops         dyadic (pointwise) ciphertext ops: Barrett modmul/add/sub
+  rotate_reduce  log-depth packed aggregation (the paper's rotate+add sum)
+  flash_attn     blocked online-softmax attention for the LM substrate
+                 (causal / local-window / logit-softcap variants)
+"""

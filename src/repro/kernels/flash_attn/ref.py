@@ -1,0 +1,33 @@
+"""Oracle: dense softmax attention with the same masking variants."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  softcap: float | None = None, sm_scale: float | None = None):
+    """q: (bh, sq, d); k, v: (bh, sk, d)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(mask[None], p, 0.0)
+    denom = p.sum(axis=-1, keepdims=True)
+    denom = jnp.where(denom == 0.0, 1.0, denom)
+    out = jnp.einsum("bqk,bkd->bqd", p / denom, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the NTT kernel: core/ntt.py's int64 reference."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.ntt import intt_ref, ntt_ref  # noqa: F401
+
+
+def ntt_fwd_ref(a_i64, psi_rev_i64, q_i64):
+    """(k, n) int64 forward negacyclic NTT (exact 60-bit products)."""
+    return ntt_ref(a_i64, psi_rev_i64, q_i64)
+
+
+def ntt_inv_ref(a_i64, ipsi_rev_i64, n_inv_i64, q_i64):
+    return intt_ref(a_i64, ipsi_rev_i64, n_inv_i64, q_i64)

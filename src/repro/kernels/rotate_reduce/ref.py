@@ -1,0 +1,17 @@
+"""Oracle for rotate_reduce: plain mod-t row sums / partial sums."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rotate_reduce_ref(x, t, chunk: int | None = None):
+    """x: (rows, n) ints mod t.  Full reduce -> every slot = row sum;
+    chunked -> slot i holds sum of its chunk's wrapped window."""
+    rows, n = x.shape
+    stop = n if chunk is None else chunk
+    out = x
+    s = 1
+    while s < stop:
+        out = (out + jnp.roll(out, -s, axis=1)) % t
+        s *= 2
+    return out

@@ -1,0 +1,47 @@
+"""Rotate-and-add reduction Pallas kernel (paper §4.2.2 COUNT/SUM).
+
+The packed-aggregation doubling pattern — rotate by 1, 2, 4, ... and add
+— executed entirely in VMEM for a batch of plaintext-domain rows.  On the
+HE path the rotation is a Galois automorphism (core/bfv.py); this kernel
+is the slot-domain equivalent used by the serving-side post-processing
+and demonstrates the log-depth schedule the engine charges for.
+
+Grid over rows; each row (n x 4 B = 128 KiB at n=32,768) stays resident
+across all log2(n) stages.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, t_ref, o_ref, *, log_n: int, stop_log: int):
+    x = x_ref[0, :]
+    t = t_ref[0, 0]
+    for s in range(stop_log):
+        x = (x + jnp.roll(x, -(1 << s))) % t
+    o_ref[0, :] = x
+
+
+def rotate_reduce_pallas(x, t, *, chunk: int | None = None, interpret: bool = True):
+    """x: (rows, n) int32 values mod t; t: (rows, 1) int32.
+
+    chunk=None reduces fully (every slot = row total); chunk=c stops at
+    log2(c) stages — the exact-partial-sums mode (n/c partials per row).
+    """
+    rows, n = x.shape
+    log_n = n.bit_length() - 1
+    stop_log = log_n if chunk is None else (chunk.bit_length() - 1)
+    kern = functools.partial(_kernel, log_n=log_n, stop_log=stop_log)
+    row = lambda i: (i, 0)
+    return pl.pallas_call(
+        kern,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, n), row), pl.BlockSpec((1, 1), row)],
+        out_specs=pl.BlockSpec((1, n), row),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        interpret=interpret,
+    )(x, t)

@@ -1,0 +1,84 @@
+"""Exact modular arithmetic on uint32 lanes (shared by the HE kernels).
+
+TPU has no 64-bit integer ALU, so 30-bit-prime RNS arithmetic is built
+from 16-bit limb splitting on uint32 vectors:
+
+  mulhi_u32      high 32 bits of a 32x32 product (4 partials + carries)
+  shoup_mulmod   a * w mod q with w' = floor(w * 2^32 / q) precomputed —
+                 one mulhi + one wrapping mul-sub (twiddles, plaintexts)
+  barrett_mulmod general a * b mod q for q in (2^28, 2^30): full 60-bit
+                 product in (hi, lo) halves, quotient via mu = 2^60 / q
+
+All functions are shape-polymorphic jnp code: they run identically inside
+Pallas kernel bodies and in host-side tests.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+
+def mulhi_u32(a, b):
+    """High 32 bits of the 64-bit product of two uint32 vectors."""
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    a1, a0 = a >> 16, a & 0xFFFF
+    b1, b0 = b >> 16, b & 0xFFFF
+    lo = a0 * b0
+    mid1 = a1 * b0
+    mid2 = a0 * b1
+    t = (lo >> 16) + (mid1 & 0xFFFF) + (mid2 & 0xFFFF)       # < 3 * 2^16
+    return a1 * b1 + (mid1 >> 16) + (mid2 >> 16) + (t >> 16)
+
+
+def mullo_u32(a, b):
+    """Low 32 bits (uint32 multiply wraps — this is just `*`)."""
+    return a.astype(jnp.uint32) * b.astype(jnp.uint32)
+
+
+def shoup_precompute(w: int, q: int) -> int:
+    """w' = floor(w * 2^32 / q) — host-side Python int math."""
+    return (int(w) << 32) // int(q)
+
+
+def shoup_mulmod(a, w, w_shoup, q):
+    """a * w mod q with precomputed w' (Longa–Naehrig).  Result < q."""
+    a = a.astype(jnp.uint32)
+    hi = mulhi_u32(a, w_shoup)
+    r = mullo_u32(a, w) - mullo_u32(hi, q)          # in [0, 2q)
+    return jnp.where(r >= q, r - q, r)
+
+
+def barrett_precompute(q: int) -> int:
+    """mu = floor(2^60 / q); q in (2^28, 2^30) keeps mu < 2^32."""
+    assert (1 << 28) < q < (1 << 30), f"Barrett tuned for 29/30-bit q, got {q}"
+    return (1 << 60) // int(q)
+
+
+def barrett_mulmod(a, b, q, mu):
+    """General a*b mod q (a, b < q < 2^30) on uint32 lanes.
+
+    P = a*b < 2^60 held as (hi, lo); x1 = floor(P / 2^29) < 2^31;
+    qhat = floor(x1 * mu / 2^31); r = P - qhat*q in [0, 3q) -> 2 csubs.
+    """
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    lo = mullo_u32(a, b)
+    hi = mulhi_u32(a, b)                              # < 2^28
+    x1 = (hi << 3) | (lo >> 29)                       # floor(P / 2^29)
+    qhat = (mulhi_u32(x1, mu) << 1) | (mullo_u32(x1, mu) >> 31)
+    r = lo - mullo_u32(qhat, q)                       # exact in low 32 bits
+    r = jnp.where(r >= q, r - q, r)
+    r = jnp.where(r >= q, r - q, r)
+    return r
+
+
+def add_mod(a, b, q):
+    s = a.astype(jnp.uint32) + b.astype(jnp.uint32)   # < 2q < 2^31
+    return jnp.where(s >= q, s - q, s)
+
+
+def sub_mod(a, b, q):
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    return jnp.where(a >= b, a - b, a + q - b)

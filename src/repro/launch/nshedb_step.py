@@ -1,0 +1,165 @@
+"""Distributed encrypted-scan step (the paper's workload on the mesh).
+
+query_step(cts, keys):  for every ciphertext block — a packed table
+segment in the NTT (evaluation) domain — evaluate
+
+  mask  = EQ(column, const)  : eq_levels pointwise squarings, each
+                               followed by an RNS key-switch
+  out   = mask * values      : one more multiply + key-switch
+  aggregate                  : rotate-reduce (rot_steps Galois hops, each
+                               another key-switch) then psum over blocks
+
+All modular arithmetic is uint32 Barrett (kernels/u32) — the same
+code that runs inside the Pallas kernels, so the dry-run HLO reflects
+the real integer op mix.  Sharding: blocks over (pod, data); limbs over
+model.  The key-switch digit product contracts over *all* limbs, which
+GSPMD turns into the all-gather over model that dominates the
+collective roofline term.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.nshedb import NshedbConfig
+from ..kernels import u32
+
+
+def make_constants(cfg: NshedbConfig):
+    """Host-side: RNS primes + Barrett mus + a Galois permutation table."""
+    from ..core.mathutil import find_ntt_primes
+    primes = find_ntt_primes(cfg.n, 30, cfg.k)
+    q = np.array(primes, dtype=np.uint32)
+    mu = np.array([(1 << 60) // int(p) for p in primes], dtype=np.uint32)
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(cfg.n).astype(np.int32)   # stand-in Galois map
+    return {"q": q, "mu": mu, "perm": perm}
+
+
+KS_MODE = "all_gather"      # | "reduce_scatter" (perf iteration #3b)
+
+
+def _tree_fold(prod, q):
+    """Halving-tree modular sum over the digit axis (log2 k rounds of
+    elementwise add_mod — shard-friendly, unlike a serial scan)."""
+    kd = prod.shape[0]
+    while kd > 1:
+        half = kd // 2
+        lo, hi = prod[:half], prod[half:kd]
+        if hi.shape[0] < lo.shape[0]:
+            hi = jnp.concatenate([hi, jnp.zeros_like(lo[: lo.shape[0] - hi.shape[0]])])
+        prod = u32.add_mod(lo, hi, q[None, :, None])
+        kd = half
+    return prod[0]
+
+
+def keyswitch(poly, ksk_b, ksk_a, q, mu, mode: str = None):
+    """RNS key-switch of `poly` (k, n): digit-major gadget product.
+
+    all_gather mode: every output limb needs every input digit -> the
+    digit contraction becomes the model-axis all-gather dominating the
+    collective roofline term.  reduce_scatter mode constrains products
+    digit-local and tree-reduces across shards instead (measured in perf
+    iteration #3b)."""
+    mode = mode or KS_MODE
+    digits = poly[:, None, :]                        # (k_digit, 1, n)
+    prod_b = u32.barrett_mulmod(digits, ksk_b, q[None, :, None], mu[None, :, None])
+    prod_a = u32.barrett_mulmod(digits, ksk_a, q[None, :, None], mu[None, :, None])
+    if mode == "reduce_scatter":
+        from jax.sharding import PartitionSpec as P
+        cons = lambda x: jax.lax.with_sharding_constraint(x, P("model", None, None))
+        prod_b, prod_a = cons(prod_b), cons(prod_a)
+    return _tree_fold(prod_b, q), _tree_fold(prod_a, q)
+
+
+def ct_square(ct, rlk_b, rlk_a, q, mu, mode=None):
+    """Evaluation-domain ciphertext squaring + relinearization.
+    ct: (2, k, n) uint32."""
+    c0, c1 = ct[0], ct[1]
+    d0 = u32.barrett_mulmod(c0, c0, q[:, None], mu[:, None])
+    d1 = u32.barrett_mulmod(c0, c1, q[:, None], mu[:, None])
+    d1 = u32.add_mod(d1, d1, q[:, None])
+    d2 = u32.barrett_mulmod(c1, c1, q[:, None], mu[:, None])
+    ks0, ks1 = keyswitch(d2, rlk_b, rlk_a, q, mu, mode)
+    return jnp.stack([u32.add_mod(d0, ks0, q[:, None]),
+                      u32.add_mod(d1, ks1, q[:, None])])
+
+
+def ct_mul(ct_a, ct_b, rlk_b, rlk_a, q, mu, mode=None):
+    a0, a1 = ct_a[0], ct_a[1]
+    b0, b1 = ct_b[0], ct_b[1]
+    qq, mm = q[:, None], mu[:, None]
+    d0 = u32.barrett_mulmod(a0, b0, qq, mm)
+    d1 = u32.add_mod(u32.barrett_mulmod(a0, b1, qq, mm),
+                     u32.barrett_mulmod(a1, b0, qq, mm), qq)
+    d2 = u32.barrett_mulmod(a1, b1, qq, mm)
+    ks0, ks1 = keyswitch(d2, rlk_b, rlk_a, q, mu, mode)
+    return jnp.stack([u32.add_mod(d0, ks0, qq), u32.add_mod(d1, ks1, qq)])
+
+
+def rotate(ct, perm, gk_b, gk_a, q, mu, mode=None):
+    """Galois rotation: coefficient permutation + key switch."""
+    rot = ct[:, :, perm]
+    ks0, ks1 = keyswitch(rot[1], gk_b, gk_a, q, mu, mode)
+    return jnp.stack([u32.add_mod(rot[0], ks0, q[:, None]), ks1])
+
+
+def query_step(cts_col, cts_val, rlk_b, rlk_a, gk_b, gk_a, q, mu, perm,
+               *, eq_levels: int, rot_steps: int, ks_mode: str = None):
+    """cts_col/cts_val: (nblocks, 2, k, n) uint32 — EQ-mask the column,
+    multiply the values, rotate-reduce, then sum across blocks."""
+
+    def per_block(col, val):
+        mask = col
+        for _ in range(eq_levels):
+            mask = ct_square(mask, rlk_b, rlk_a, q, mu, ks_mode)
+        out = ct_mul(mask, val, rlk_b, rlk_a, q, mu, ks_mode)
+        for _ in range(rot_steps):
+            rot = rotate(out, perm, gk_b, gk_a, q, mu, ks_mode)
+            out = jnp.stack([u32.add_mod(out[0], rot[0], q[:, None]),
+                             u32.add_mod(out[1], rot[1], q[:, None])])
+        return out
+
+    outs = jax.vmap(per_block)(cts_col, cts_val)
+    # binary-tree modular block aggregation: log2(nb) elementwise halving
+    # rounds — the sharded block axis reduces via collectives, not a
+    # serial chain.
+    nb = outs.shape[0]
+    while nb > 1:
+        half = nb // 2
+        outs = u32.add_mod(outs[:half], outs[half:nb], q[None, None, :, None])
+        nb = half
+    return outs[0]
+
+
+def input_specs(cfg: NshedbConfig, nblocks: int):
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    u = jnp.uint32
+    ct = jax.ShapeDtypeStruct((nblocks, 2, cfg.k, cfg.n), u)
+    ksk = jax.ShapeDtypeStruct((cfg.k, cfg.k, cfg.n), u)
+    return {
+        "cts_col": ct, "cts_val": ct,
+        "rlk_b": ksk, "rlk_a": ksk, "gk_b": ksk, "gk_a": ksk,
+        "q": jax.ShapeDtypeStruct((cfg.k,), u),
+        "mu": jax.ShapeDtypeStruct((cfg.k,), u),
+        "perm": jax.ShapeDtypeStruct((cfg.n,), jnp.int32),
+    }
+
+
+def shardings(mesh, cfg: NshedbConfig, nblocks: int):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    names = mesh.axis_names
+    blocks = tuple(a for a in ("pod", "data") if a in names) or None
+    model = "model" if "model" in names else None
+    ns = lambda *sp: NamedSharding(mesh, P(*sp))
+    return {
+        "cts_col": ns(blocks, None, model, None),
+        "cts_val": ns(blocks, None, model, None),
+        # key-switch keys: digit axis replicated, output limb over model
+        "rlk_b": ns(None, model, None), "rlk_a": ns(None, model, None),
+        "gk_b": ns(None, model, None), "gk_a": ns(None, model, None),
+        "q": ns(None), "mu": ns(None), "perm": ns(None),
+    }

@@ -1,0 +1,239 @@
+"""Shared neural layers: RMSNorm, RoPE, (GQA/local/softcap) attention,
+MLA attention with compressed-latent cache, gated MLP.
+
+Parameters are plain nested dicts of jnp arrays; every apply function is
+pure.  Attention supports three modes:
+  train/prefill  full sequence, optionally returning a KV cache
+  decode         one new token against a cache (static shapes)
+Local attention masks by window; GQA repeats KV heads at compute time.
+The Pallas flash kernel (kernels/flash_attn) is the TPU production path;
+the jnp path below is the portable reference the dry-run lowers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * (1.0 + w)
+
+
+def init_norm(cfg: ModelConfig, dtype):
+    return jnp.zeros((cfg.d_model,), dtype=dtype)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D) rotary over last dim; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Standard (GQA) attention.
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg: ModelConfig, dtype):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, H * hd), dtype) * scale,
+        "wk": jax.random.normal(ks[1], (d, Hkv * hd), dtype) * scale,
+        "wv": jax.random.normal(ks[2], (d, Hkv * hd), dtype) * scale,
+        "wo": jax.random.normal(ks[3], (H * hd, d), dtype) * (H * hd) ** -0.5,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _mask(sq, sk, q_start, k_start, window, dtype):
+    """(sq, sk) additive mask: causal plus optional local window.
+
+    k_start is the global position of the first key — nonzero when a
+    local layer's cache keeps only the last `window` positions."""
+    q_pos = q_start + jnp.arange(sq)[:, None]
+    k_pos = k_start + jnp.arange(sk)[None, :]
+    ok = q_pos >= k_pos
+    if window:
+        ok &= (q_pos - k_pos) < window
+    return jnp.where(ok, 0.0, -1e30).astype(dtype)
+
+
+# Above this many query positions, attention runs chunked (perf
+# iteration #2): the (B,H,S,S) score tensor never materializes — peak
+# activation drops by S/CHUNK_Q and the chunk body is rematerialized in
+# the backward pass (flash-attention memory behaviour; the Pallas kernel
+# in kernels/flash_attn is the real-TPU twin of this lowering).
+CHUNK_Q = 2048
+
+
+def _attn_dense(q, k, v, cfg: ModelConfig, *, q_start, k_start, window, causal):
+    B, S, H, D = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * (D ** -0.5)
+    if cfg.attn_softcap:
+        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+    if causal:
+        s = s + _mask(S, k.shape[1], q_start, k_start, window, s.dtype)[None, None]
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return out.reshape(B, S, H * D)
+
+
+def attn_scores(q, k, v, cfg: ModelConfig, *, q_start=0, k_start=0, window=0,
+                causal=True):
+    """q: (B,S,H,D); k/v: (B,Sk,Hkv,D) -> (B,S,H*D)."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    if causal and S > CHUNK_Q and S % CHUNK_Q == 0:
+        nq = S // CHUNK_Q
+        qs = jnp.swapaxes(q.reshape(B, nq, CHUNK_Q, H, D), 0, 1)
+
+        def chunk(args):
+            i, qc = args
+            return _attn_dense(qc, k, v, cfg, q_start=q_start + i * CHUNK_Q,
+                               k_start=k_start, window=window, causal=True)
+
+        outs = jax.lax.map(jax.checkpoint(chunk), (jnp.arange(nq), qs))
+        return jnp.swapaxes(outs, 0, 1).reshape(B, S, H * D)
+    return _attn_dense(q, k, v, cfg, q_start=q_start, k_start=k_start,
+                       window=window, causal=causal)
+
+
+def apply_attn(p, x, cfg: ModelConfig, *, window=0, cache=None, pos=0,
+               causal=True, kv_override=None):
+    """Returns (out, new_cache).  cache = dict(k=(B,Sc,Hkv,D), v=...) holding
+    the last Sc positions (Sc = window for local layers); decode appends
+    the current token's kv.  kv_override: cross-attention — kv computed
+    from the given memory, no rope, no cache."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kv_src = kv_override if kv_override is not None else x
+    q = x @ p["wq"]
+    k = kv_src @ p["wk"]
+    v = kv_src @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, kv_src.shape[1], Hkv, hd)
+    v = v.reshape(B, kv_src.shape[1], Hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if kv_override is not None:
+        out = attn_scores(q, k, v, cfg, causal=False)
+        return out @ p["wo"], None
+    positions = pos + jnp.arange(S)
+    q = rope(q, jnp.broadcast_to(positions, (B, S)), cfg.rope_theta)
+    k = rope(k, jnp.broadcast_to(positions, (B, S)), cfg.rope_theta)
+    if cache is not None:
+        k_all = jnp.concatenate([cache["k"], k], axis=1)
+        v_all = jnp.concatenate([cache["v"], v], axis=1)
+    else:
+        k_all, v_all = k, v
+    k_start = pos + S - k_all.shape[1]
+    out = attn_scores(q, k_all, v_all, cfg, q_start=pos, k_start=k_start,
+                      window=window, causal=causal)
+    if cache is not None and window and k_all.shape[1] > window:
+        k_all = k_all[:, -window:]
+        v_all = v_all[:, -window:]
+    new_cache = {"k": k_all, "v": v_all}
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (deepseek-v2).  The KV cache stores
+# only the compressed latent (kv_lora_rank + rope_head_dim per token).
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ql, kl, rd = cfg.q_lora_rank, cfg.kv_lora_rank, cfg.rope_head_dim
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "q_down": jax.random.normal(ks[0], (d, ql), dtype) * s,
+        "q_norm": jnp.zeros((ql,), dtype),
+        "q_up": jax.random.normal(ks[1], (ql, H * (hd + rd)), dtype) * ql ** -0.5,
+        "kv_down": jax.random.normal(ks[2], (d, kl + rd), dtype) * s,
+        "kv_norm": jnp.zeros((kl,), dtype),
+        "k_up": jax.random.normal(ks[3], (kl, H * hd), dtype) * kl ** -0.5,
+        "v_up": jax.random.normal(ks[4], (kl, H * hd), dtype) * kl ** -0.5,
+        "wo": jax.random.normal(ks[5], (H * hd, d), dtype) * (H * hd) ** -0.5,
+    }
+
+
+def apply_mla(p, x, cfg: ModelConfig, *, cache=None, pos=0, causal=True, **_):
+    B, S, d = x.shape
+    H, hd, rd, kl = cfg.n_heads, cfg.hd, cfg.rope_head_dim, cfg.kv_lora_rank
+    ql = cfg.q_lora_rank
+    q = rmsnorm(x @ p["q_down"], p["q_norm"], cfg.norm_eps) @ p["q_up"]
+    q = q.reshape(B, S, H, hd + rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    kv = x @ p["kv_down"]                             # (B,S,kl+rd)
+    latent = rmsnorm(kv[..., :kl], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., kl:][:, :, None, :]              # (B,S,1,rd) shared head
+    positions = pos + jnp.arange(S)
+    posb = jnp.broadcast_to(positions, (B, S))
+    q_rope = rope(q_rope, posb, cfg.rope_theta)
+    k_rope = rope(k_rope, posb, cfg.rope_theta)
+    lat_rope = jnp.concatenate([latent, k_rope[:, :, 0, :]], axis=-1)  # cacheable
+    if cache is not None:
+        lat_all = jnp.concatenate([cache["latent"], lat_rope], axis=1)
+    else:
+        lat_all = lat_rope
+    latent_all, k_rope_all = lat_all[..., :kl], lat_all[..., kl:]
+    k_nope = (latent_all @ p["k_up"]).reshape(B, -1, H, hd)
+    vv = (latent_all @ p["v_up"]).reshape(B, -1, H, hd)
+    s = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+         + jnp.einsum("bqhr,bkr->bhqk", q_rope, k_rope_all)).astype(jnp.float32)
+    s = s * ((hd + rd) ** -0.5)
+    if causal:
+        k_start = pos + S - lat_all.shape[1]
+        s = s + _mask(S, lat_all.shape[1], pos, k_start, 0, s.dtype)[None, None]
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pr, vv).reshape(B, S, H * hd)
+    return out @ p["wo"], {"latent": lat_all}
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP.
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, dtype, ff: int | None = None):
+    d = cfg.d_model
+    ff = ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_gate": jax.random.normal(ks[0], (d, ff), dtype) * d ** -0.5,
+        "w_down": jax.random.normal(ks[2], (ff, d), dtype) * ff ** -0.5,
+    }
+    if cfg.mlp_gated:
+        p["w_up"] = jax.random.normal(ks[1], (d, ff), dtype) * d ** -0.5
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    h = act(x @ p["w_gate"])
+    if cfg.mlp_gated:
+        h = h * (x @ p["w_up"])
+    return h @ p["w_down"]

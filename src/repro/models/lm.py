@@ -1,0 +1,230 @@
+"""Model assembly: parameter init, scanned forward pass, caches, loss.
+
+Depth is organized as repeating *units* (cfg.pattern).  Parameters of the
+u-th unit's s-th slot live in params["units"][s] stacked along a leading
+n_units axis; the forward pass lax.scans one unit body over that stack,
+so the lowered HLO contains a single unit regardless of depth (62-layer
+gemma3 compiles as one 6-layer unit + a 2-layer tail).  Caches mirror the
+same layout.
+
+Three entry points, shared by every architecture:
+  forward(..., tokens|embeds, caches=None, pos=0)       train / prefill
+  forward(..., caches=filled, pos=ctx_len)              decode (S=1)
+  enc-dec (whisper): encode() runs the non-causal encoder stack on the
+  frontend-stub embeddings; decoder blocks add cross-attention over it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (apply_attn, apply_mla, apply_mlp, init_attn, init_mla,
+                     init_mlp, init_norm, rmsnorm)
+from .moe import apply_moe, init_moe
+from .seqmix import apply_rglru, apply_ssm, init_rglru, init_ssm
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply (one layer).
+# ---------------------------------------------------------------------------
+
+def init_block(key, kind: str, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {"norm": init_norm(cfg, dtype), "ssm": init_ssm(ks[0], cfg, dtype)}
+    if kind == "rglru":
+        return {"norm1": init_norm(cfg, dtype), "rglru": init_rglru(ks[0], cfg, dtype),
+                "norm2": init_norm(cfg, dtype), "mlp": init_mlp(ks[1], cfg, dtype)}
+    # attention kinds: attn | local | xdec (decoder w/ cross-attention)
+    p = {"norm1": init_norm(cfg, dtype),
+         "attn": (init_mla(ks[0], cfg, dtype) if cfg.use_mla
+                  else init_attn(ks[0], cfg, dtype)),
+         "norm2": init_norm(cfg, dtype)}
+    if kind == "xdec":
+        p["xattn"] = init_attn(ks[2], cfg, dtype)
+        p["norm_x"] = init_norm(cfg, dtype)
+    if cfg.is_moe:
+        p["mlp"] = init_moe(ks[1], cfg, dtype)
+    elif cfg.d_ff:
+        p["mlp"] = init_mlp(ks[1], cfg, dtype)
+    return p
+
+
+def apply_block(p, x, kind: str, cfg: ModelConfig, *, cache=None, pos=0,
+                causal=True, enc_out=None):
+    if kind == "ssm":
+        y, nc = apply_ssm(p["ssm"], rmsnorm(x, p["norm"], cfg.norm_eps), cfg, cache=cache)
+        return x + y, nc
+    if kind == "rglru":
+        y, nc = apply_rglru(p["rglru"], rmsnorm(x, p["norm1"], cfg.norm_eps), cfg, cache=cache)
+        h = x + y
+        h = h + apply_mlp(p["mlp"], rmsnorm(h, p["norm2"], cfg.norm_eps), cfg)
+        return h, nc
+    window = cfg.window if kind == "local" else 0
+    attn_fn = apply_mla if cfg.use_mla else apply_attn
+    y, nc = attn_fn(p["attn"], rmsnorm(x, p["norm1"], cfg.norm_eps), cfg,
+                    window=window, cache=cache, pos=pos, causal=causal)
+    h = x + y
+    if kind == "xdec":
+        # cross-attention: kv from the encoder output (no cache growth).
+        q_in = rmsnorm(h, p["norm_x"], cfg.norm_eps)
+        y, _ = apply_attn(p["xattn"], q_in, cfg, cache=None, pos=0, causal=False,
+                          kv_override=enc_out)
+        h = h + y
+    if "mlp" in p:
+        mlp_fn = apply_moe if cfg.is_moe else apply_mlp
+        h = h + mlp_fn(p["mlp"], rmsnorm(h, p["norm2"], cfg.norm_eps), cfg)
+    return h, nc
+
+
+# ---------------------------------------------------------------------------
+# Caches.
+# ---------------------------------------------------------------------------
+
+def _slot_cache_shape(kind: str, cfg: ModelConfig, B: int, ctx: int, dtype):
+    """Empty/filled cache pytree for ONE layer of `kind` with ctx tokens."""
+    if kind == "ssm":
+        return {"state": jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+                "conv": jnp.zeros((B, cfg.conv_width - 1,
+                                   cfg.ssm_heads * cfg.ssm_head_dim + 2 * cfg.ssm_state), dtype)}
+    if kind == "rglru":
+        w = cfg.lru_width or cfg.d_model
+        return {"h": jnp.zeros((B, w), dtype),
+                "conv": jnp.zeros((B, cfg.conv_width - 1, w), dtype)}
+    keep = min(ctx, cfg.window) if kind == "local" and cfg.window else ctx
+    if cfg.use_mla:
+        return {"latent": jnp.zeros((B, keep, cfg.kv_lora_rank + cfg.rope_head_dim), dtype)}
+    return {"k": jnp.zeros((B, keep, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((B, keep, cfg.n_kv_heads, cfg.hd), dtype)}
+
+
+def make_cache(cfg: ModelConfig, B: int, ctx: int, dtype=jnp.bfloat16):
+    """Stacked per-slot caches matching the scanned parameter layout."""
+    units = [jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_units,) + a.shape),
+                          _slot_cache_shape(kind, cfg, B, ctx, dtype))
+             for kind in cfg.unit]
+    tail = [_slot_cache_shape(kind, cfg, B, ctx, dtype) for kind in cfg.tail]
+    return {"units": units, "tail": tail}
+
+
+# ---------------------------------------------------------------------------
+# Parameter init.
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 8)
+    d, V = cfg.d_model, cfg.vocab
+    params = {"embed": jax.random.normal(keys[0], (V, d), dtype) * 0.02,
+              "final_norm": init_norm(cfg, dtype)}
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(keys[1], (d, V), dtype) * d ** -0.5
+
+    def stacked(base_key, kind, count):
+        ks = jax.random.split(base_key, count)
+        return jax.vmap(lambda k: init_block(k, kind, cfg, dtype))(ks)
+
+    params["units"] = [stacked(jax.random.fold_in(keys[2], s), kind, cfg.n_units)
+                       for s, kind in enumerate(cfg.unit)]
+    params["tail"] = [init_block(jax.random.fold_in(keys[3], s), kind, cfg, dtype)
+                      for s, kind in enumerate(cfg.tail)]
+    if cfg.is_enc_dec:
+        params["enc_units"] = [stacked(keys[4], "attn", cfg.enc_layers)]
+        params["enc_norm"] = init_norm(cfg, dtype)
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    import math
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg, jnp.bfloat16),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+# ---------------------------------------------------------------------------
+# Forward.
+# ---------------------------------------------------------------------------
+
+def _scan_units(params_units, caches_units, x, cfg, *, pos, causal, enc_out,
+                unit=None):
+    """lax.scan one unit body over the stacked unit parameters."""
+    new_caches = []
+    kinds = unit if unit is not None else cfg.unit
+    for s, kind in enumerate(kinds):
+        pstack = params_units[s]
+        cstack = caches_units[s] if caches_units is not None else None
+        if cstack is None:
+            def body_nc(carry, p_t, kind=kind):
+                h, _ = apply_block(p_t, carry, kind, cfg, cache=None, pos=pos,
+                                   causal=causal, enc_out=enc_out)
+                return h, 0.0
+            x, _ = jax.lax.scan(body_nc, x, pstack)
+            new_caches.append(None)
+        else:
+            def body(carry, xs, kind=kind):
+                p_t, c_t = xs
+                h, nc = apply_block(p_t, carry, kind, cfg, cache=c_t, pos=pos,
+                                    causal=causal, enc_out=enc_out)
+                return h, nc
+            x, ncs = jax.lax.scan(body, x, (pstack, cstack))
+            new_caches.append(ncs)
+    return x, new_caches
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None, caches=None,
+            pos=0, enc_embeds=None, patches=None):
+    """Returns (logits, new_caches).
+
+    tokens: (B, S) int32 — standard path.
+    embeds: (B, S, d) — full frontend-stub path (embeds replace tokens).
+    patches: (B, P, d) — vision-stub path: patch embeddings overwrite the
+             first P positions of the token embedding (phi-3-vision).
+    enc_embeds: (B, S_enc, d) — encoder input for enc-dec models.
+    """
+    d = cfg.d_model
+    if embeds is not None:
+        x = embeds
+    else:
+        x = params["embed"][tokens] * jnp.asarray(d ** 0.5, params["embed"].dtype)
+        if patches is not None:
+            x = jax.lax.dynamic_update_slice(x, patches.astype(x.dtype), (0, 0, 0))
+
+    enc_out = None
+    if cfg.is_enc_dec:
+        assert enc_embeds is not None, "enc-dec needs encoder inputs"
+        e, _ = _scan_units(params["enc_units"], None, enc_embeds,
+                           cfg, pos=0, causal=False, enc_out=None, unit=("attn",))
+        enc_out = rmsnorm(e, params["enc_norm"], cfg.norm_eps)
+
+    caches_units = caches["units"] if caches is not None else None
+    x, new_unit_caches = _scan_units(params["units"], caches_units, x, cfg,
+                                     pos=pos, causal=True, enc_out=enc_out)
+    new_tail = []
+    for s, kind in enumerate(cfg.tail):
+        c = caches["tail"][s] if caches is not None else None
+        x, nc = apply_block(params["tail"][s], x, kind, cfg, cache=c, pos=pos,
+                            causal=True, enc_out=enc_out)
+        new_tail.append(nc)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["head"]
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    new_caches = {"units": new_unit_caches, "tail": new_tail} if caches is not None else None
+    return logits, new_caches
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels, embeds=None,
+            enc_embeds=None, patches=None):
+    logits, _ = forward(params, cfg, tokens=tokens, embeds=embeds,
+                        enc_embeds=enc_embeds, patches=patches)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,191 @@
+"""Sequence mixers without attention: Mamba2 SSD and RG-LRU.
+
+Mamba2 (SSD, state-space duality form): scalar-per-head decay a_t =
+exp(dt * A_h); chunked evaluation — quadratic attention-like path inside
+chunks of Q tokens, linear state recurrence across chunks (lax.scan).
+Decode is the O(1) recurrence  S <- a S + dt * B x;  y = C S + D x.
+
+RG-LRU (recurrentgemma): gated linear recurrence
+  r_t = sigmoid(W_r x), i_t = sigmoid(W_i x)
+  log a_t = -c * softplus(L) * r_t
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+evaluated with an associative scan (log-depth) for train/prefill and the
+same O(1) update for decode, preceded by a width-4 causal conv.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD.
+# ---------------------------------------------------------------------------
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_heads * cfg.ssm_head_dim
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    return {
+        # projections for z (gate), x, B, C, dt
+        "w_in": jax.random.normal(ks[0], (d, 2 * di + 2 * N + cfg.ssm_heads), dtype) * d ** -0.5,
+        "conv": jax.random.normal(ks[1], (cfg.conv_width, di + 2 * N), dtype) * 0.1,
+        "A_log": jnp.zeros((cfg.ssm_heads,), dtype),
+        "D": jnp.ones((cfg.ssm_heads,), dtype),
+        "dt_bias": jnp.zeros((cfg.ssm_heads,), dtype),
+        "w_out": jax.random.normal(ks[2], (di, d), dtype) * di ** -0.5,
+        "gate_norm": jnp.zeros((di,), dtype),
+    }
+
+
+def _causal_conv(x, w):
+    """x: (B, S, C); w: (W, C) depthwise causal conv via shifted adds."""
+    W = w.shape[0]
+    out = x * w[W - 1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1], :]
+        out = out + shifted * w[W - 1 - i]
+    return out
+
+
+def _ssd_chunked(xh, a, B_, C_, chunk):
+    """SSD scan.  xh: (B,S,H,P) dt-scaled inputs; a: (B,S,H) decay in (0,1];
+    B_, C_: (B,S,N).  Returns (B,S,H,P)."""
+    B, S, H, P = xh.shape
+    N = B_.shape[-1]
+    nc = S // chunk
+    xc = xh.reshape(B, nc, chunk, H, P)
+    ac = a.reshape(B, nc, chunk, H)
+    Bc = B_.reshape(B, nc, chunk, N)
+    Cc = C_.reshape(B, nc, chunk, N)
+    loga = jnp.log(ac + 1e-20)
+    cum = jnp.cumsum(loga, axis=2)                       # (B,nc,Q,H)
+    # intra-chunk: y_t += C_t . sum_{s<=t} prod_{s<u<=t} a_u B_s x_s
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)           # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcts,bctsh,bcshp->bcthp", cb, decay, xc)
+    # chunk states: S_c = sum_s prod_{s<u<=Q} a_u B_s x_s
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)              # (B,nc,Q,H)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, tail, xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
+
+    def step(carry, inp):
+        s_prev = carry                                    # (B,H,P,N)
+        st, dec = inp                                     # (B,H,P,N), (B,H)
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev
+
+    init = jnp.zeros((B, H, P, N), xh.dtype)
+    s_final, s_in = jax.lax.scan(step, init,
+                                 (jnp.swapaxes(states, 0, 1), jnp.swapaxes(chunk_decay, 0, 1)))
+    s_in = jnp.swapaxes(s_in, 0, 1)                      # (B,nc,H,P,N) state entering chunk
+    inter_decay = jnp.exp(cum)                           # (B,nc,Q,H)
+    y_inter = jnp.einsum("bctn,bcth,bchpn->bcthp", Cc, inter_decay, s_in)
+    return (y_intra + y_inter).reshape(B, S, H, P), s_final
+
+
+def apply_ssm(p, x, cfg: ModelConfig, *, cache=None, **_):
+    """Returns (out, new_cache); cache = dict(state=(B,H,P,N), conv=(B,W-1,C))."""
+    B, S, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = H * P
+    proj = x @ p["w_in"]
+    z, xin, B_, C_, dt = jnp.split(proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, B_, C_], axis=-1)
+    if cache is not None and S == 1:
+        hist = jnp.concatenate([cache["conv"], conv_in], axis=1)   # (B,W,C)
+        conv_out = (hist * p["conv"][None]).sum(axis=1, keepdims=True)
+        new_conv = hist[:, 1:, :]
+    else:
+        conv_out = _causal_conv(conv_in, p["conv"])
+        new_conv = conv_in[:, -(cfg.conv_width - 1):, :]
+    conv_out = jax.nn.silu(conv_out)
+    xin, B_, C_ = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                   # (H,)
+    a = jnp.exp(dt * A)                                            # (B,S,H)
+    xh = xin.reshape(B, S, H, P) * dt[..., None].astype(x.dtype)
+    if cache is not None and S == 1:
+        s_prev = cache["state"]                                    # (B,H,P,N)
+        s_new = s_prev * a[:, 0, :, None, None] \
+            + jnp.einsum("bhp,bn->bhpn", xh[:, 0], B_[:, 0])
+        y = jnp.einsum("bn,bhpn->bhp", C_[:, 0], s_new)[:, None]   # (B,1,H,P)
+        new_state = s_new
+    else:
+        pad = (-S) % cfg.ssm_chunk
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+            B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+            C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        y, s_final = _ssd_chunked(xh.astype(jnp.float32), a, B_.astype(jnp.float32),
+                                  C_.astype(jnp.float32), cfg.ssm_chunk)
+        y = y[:, :S]
+        xh = xh[:, :S]                                # drop chunk padding
+        new_state = s_final.astype(x.dtype)           # decode handoff
+    y = y.astype(x.dtype) + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di) * jax.nn.silu(z)
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+                          + 1e-6).astype(x.dtype) * (1.0 + p["gate_norm"])
+    out = y @ p["w_out"]
+    return out, {"state": new_state, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (recurrentgemma).
+# ---------------------------------------------------------------------------
+
+def init_rglru(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 5)
+    return {
+        "w_x": jax.random.normal(ks[0], (d, w), dtype) * d ** -0.5,
+        "w_y": jax.random.normal(ks[1], (d, w), dtype) * d ** -0.5,
+        "conv": jax.random.normal(ks[2], (cfg.conv_width, w), dtype) * 0.1,
+        "w_r": jax.random.normal(ks[3], (w, w), dtype) * w ** -0.5,
+        "w_i": jax.random.normal(ks[4], (w, w), dtype) * w ** -0.5,
+        "Lambda": jnp.full((w,), 2.0, dtype),            # softplus -> decay
+        "w_out": jax.random.normal(jax.random.fold_in(key, 9), (w, d), dtype) * w ** -0.5,
+    }
+
+
+def apply_rglru(p, x, cfg: ModelConfig, *, cache=None, **_):
+    """Returns (out, new_cache); cache = dict(h=(B,w), conv=(B,W-1,w))."""
+    B, S, d = x.shape
+    gate_branch = jax.nn.gelu(x @ p["w_y"])
+    u = x @ p["w_x"]
+    if cache is not None and S == 1:
+        hist = jnp.concatenate([cache["conv"], u], axis=1)
+        u_c = (hist * p["conv"][None]).sum(axis=1, keepdims=True)
+        new_conv = hist[:, 1:, :]
+    else:
+        u_c = _causal_conv(u, p["conv"])
+        new_conv = u[:, -(cfg.conv_width - 1):, :]
+    r = jax.nn.sigmoid(u_c @ p["w_r"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(u_c @ p["w_i"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["Lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)                                   # (B,S,w)
+    gated = (i * u_c).astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    v = beta * gated
+    if cache is not None and S == 1:
+        h = a[:, 0] * cache["h"] + v[:, 0]
+        y = h[:, None, :]
+        new_h = h
+    else:
+        def combine(c1, c2):
+            a1, v1 = c1
+            a2, v2 = c2
+            return a1 * a2, v1 * a2 + v2
+        a_s, y = jax.lax.associative_scan(combine, (a, v), axis=1)
+        new_h = y[:, -1, :]
+    out = (y.astype(x.dtype) * gate_branch) @ p["w_out"]
+    return out, {"h": new_h.astype(x.dtype), "conv": new_conv}

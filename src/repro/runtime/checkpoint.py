@@ -1,0 +1,136 @@
+"""Fault-tolerant checkpointing.
+
+Design (per DESIGN.md §6):
+  * step-granular checkpoints: params + optimizer + data-pipeline cursor
+  * atomic manifest: every leaf is written under a tmp directory, then a
+    single os.rename publishes the step — a crash mid-write can never
+    leave a readable-but-corrupt checkpoint
+  * async double-buffered writer: the training loop hands off host
+    copies and keeps stepping while the previous snapshot flushes
+  * elastic restore: leaves are stored unsharded with their logical
+    names; restore re-shards onto whatever mesh the new job brings up
+    (different device count included) via NamedSharding placement
+  * keep-last-k garbage collection
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        out[name] = leaf
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, params, opt=None, extra: dict | None = None):
+        """Snapshot to host then write (async by default)."""
+        host = {
+            "params": jax.tree.map(np.asarray, params),
+            "opt": jax.tree.map(np.asarray, opt) if opt is not None else None,
+        }
+        meta = {"step": step, "extra": extra or {}}
+        self.wait()                               # double buffer: one in flight
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, meta)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host: dict, meta: dict):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": meta["step"], "extra": meta["extra"], "leaves": {}}
+        for group in ("params", "opt"):
+            tree = host[group]
+            if tree is None:
+                continue
+            for name, leaf in _flatten(tree).items():
+                arr = np.asarray(leaf)
+                fn = f"{group}__{name.replace('/', '__')}.npy"
+                np.save(os.path.join(tmp, fn), arr)
+                manifest["leaves"][f"{group}/{name}"] = {
+                    "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                     # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                    out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, params_like, opt_like=None, shardings=None):
+        """Rebuild pytrees from a checkpoint.  params_like/opt_like give
+        structure; shardings (optional, same structure) re-shard onto the
+        *current* mesh — elastic restore onto any device count."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        def rebuild(group, like, shard_tree):
+            if like is None:
+                return None
+            names = list(_flatten(like))
+            flat_like, treedef = jax.tree_util.tree_flatten(like)
+            shards = (jax.tree_util.tree_flatten(shard_tree)[0]
+                      if shard_tree is not None else [None] * len(flat_like))
+            leaves = []
+            for name, ref, sh in zip(names, flat_like, shards):
+                info = manifest["leaves"][f"{group}/{name}"]
+                arr = np.load(os.path.join(d, info["file"]))
+                if sh is not None:
+                    leaves.append(jax.device_put(arr, sh))
+                else:
+                    leaves.append(jax.device_put(arr))
+            return treedef.unflatten(leaves)
+
+        params = rebuild("params", params_like,
+                         shardings.get("params") if shardings else None)
+        opt = rebuild("opt", opt_like,
+                      shardings.get("opt") if shardings else None)
+        return params, opt, manifest["extra"]

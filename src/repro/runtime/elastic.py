@@ -1,0 +1,78 @@
+"""Straggler detection and elastic mesh planning.
+
+StragglerDetector consumes per-worker step-time reports (heartbeats) and
+maintains an EWMA per worker; a worker slower than `threshold` x the
+fleet median for `patience` consecutive heartbeats — or silent past the
+timeout — lands on the exclusion list.  The launcher feeds the exclusion
+list to elastic_mesh_plan() on restart to pick the largest viable mesh
+from the surviving devices, and CheckpointManager.restore() re-shards
+the last snapshot onto it (leaves are stored unsharded, so any device
+count works).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class WorkerStat:
+    ewma: float = 0.0
+    last_seen: float = 0.0
+    strikes: int = 0
+
+
+class StragglerDetector:
+    def __init__(self, threshold: float = 2.0, patience: int = 3,
+                 timeout_s: float = 60.0, alpha: float = 0.3):
+        self.threshold = threshold
+        self.patience = patience
+        self.timeout_s = timeout_s
+        self.alpha = alpha
+        self.workers: dict[int, WorkerStat] = {}
+
+    def report(self, worker: int, step_time: float, now: float | None = None):
+        now = time.monotonic() if now is None else now
+        st = self.workers.setdefault(worker, WorkerStat())
+        st.ewma = step_time if st.ewma == 0 else \
+            self.alpha * step_time + (1 - self.alpha) * st.ewma
+        st.last_seen = now
+
+    def _median(self) -> float:
+        vals = sorted(w.ewma for w in self.workers.values() if w.ewma > 0)
+        return vals[len(vals) // 2] if vals else 0.0
+
+    def evaluate(self, now: float | None = None) -> list[int]:
+        """Returns the exclusion list (dead or persistently slow)."""
+        now = time.monotonic() if now is None else now
+        med = self._median()
+        out = []
+        for wid, st in self.workers.items():
+            dead = now - st.last_seen > self.timeout_s
+            slow = med > 0 and st.ewma > self.threshold * med
+            st.strikes = st.strikes + 1 if slow else 0
+            if dead or st.strikes >= self.patience:
+                out.append(wid)
+        return sorted(out)
+
+
+def elastic_mesh_plan(total_devices: int, excluded: int,
+                      model_parallel: int = 16) -> dict:
+    """Pick the largest (data, model) mesh from surviving devices.
+
+    model_parallel is kept fixed (TP size is baked into layouts and must
+    divide head/expert counts); the data axis absorbs the loss — the
+    standard elasticity policy for TP x FSDP jobs.
+    """
+    alive = total_devices - excluded
+    if alive < model_parallel:
+        raise RuntimeError(f"only {alive} devices left, need >= {model_parallel} for TP")
+    data = alive // model_parallel
+    # largest power-of-two data axis keeps batch divisibility
+    d = 1
+    while d * 2 <= data:
+        d *= 2
+    used = d * model_parallel
+    return {"mesh_shape": (d, model_parallel), "axes": ("data", "model"),
+            "devices_used": used, "devices_idle": alive - used,
+            "global_batch_scale": d}

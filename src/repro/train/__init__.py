@@ -1,0 +1,3 @@
+"""Training substrate: AdamW, step builders, gradient compression."""
+from .optim import adamw_init, adamw_update  # noqa: F401
+from .steps import make_train_step, make_prefill_step, make_decode_step  # noqa: F401

@@ -1,0 +1,85 @@
+"""Step builders: train (loss + AdamW), prefill, decode.
+
+These are the functions the launcher jits with explicit in/out shardings;
+they stay mesh-agnostic themselves (GSPMD propagates from the argument
+shardings the launcher provides).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models import lm
+from ..models.config import ModelConfig
+from .compression import compress_with_feedback, init_error
+from .optim import adamw_init, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4,
+                    compress_grads: bool = False):
+    """Returns step(params, opt, batch) -> (params, opt, metrics).
+
+    batch: dict with tokens, labels (+ patches / enc_embeds stubs).
+    """
+
+    def step(params, opt, batch):
+        def loss(p):
+            return lm.loss_fn(p, cfg, batch["tokens"], batch["labels"],
+                              enc_embeds=batch.get("enc_embeds"),
+                              patches=batch.get("patches"))
+        lval, grads = jax.value_and_grad(loss)(params)
+        if compress_grads:
+            err = opt.get("err")
+            grads, err = compress_with_feedback(grads, err)
+        new_params, new_inner = adamw_update(grads, opt["adam"], params, lr=lr)
+        new_opt = {"adam": new_inner}
+        if compress_grads:
+            new_opt["err"] = err
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return new_params, new_opt, {"loss": lval, "grad_norm": gnorm}
+
+    return step
+
+
+def init_opt(cfg: ModelConfig, params, *, compress_grads: bool = False):
+    opt = {"adam": adamw_init(params)}
+    if compress_grads:
+        opt["err"] = init_error(params)
+    return opt
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """step(params, batch) -> (last_logits, caches)."""
+
+    def step(params, batch):
+        B = batch["tokens"].shape[0]
+        cache0 = lm.make_cache(cfg, B, 0, _cache_dtype(params))
+        logits, caches = lm.forward(
+            params, cfg, tokens=batch["tokens"], caches=cache0, pos=0,
+            patches=batch.get("patches"), enc_embeds=batch.get("enc_embeds"))
+        return logits[:, -1, :], caches
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """step(params, caches, batch) -> (logits, new_caches).
+
+    batch["tokens"]: (B, 1); pos is the (static) context length carried
+    by the cache shapes."""
+
+    def step(params, caches, batch, *, pos: int):
+        logits, new_caches = lm.forward(
+            params, cfg, tokens=batch["tokens"], caches=caches, pos=pos,
+            enc_embeds=batch.get("enc_embeds"))
+        return logits[:, -1, :], new_caches
+
+    return step
+
+
+def _cache_dtype(params):
+    leaf = jax.tree.leaves(params)[0]
+    return leaf.dtype

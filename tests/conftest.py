@@ -1,0 +1,47 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the host's real
+single device; only launch/dryrun.py (its own process) forces 512."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def micro_params():
+    """t=257 (Fermat prime), n=128: full comparison circuits fit fast."""
+    from repro.core.params import make_params
+    return make_params(n=128, t=257, k=12)
+
+
+@pytest.fixture(scope="session")
+def tiny_params():
+    """t=7681, n=256: the generic (non-Fermat) exponent path."""
+    from repro.core.params import test_params
+    return test_params()
+
+
+@pytest.fixture(scope="session")
+def bfv_micro(micro_params):
+    from repro.engine.backend import BFVBackend
+    return BFVBackend(micro_params, seed=11)
+
+
+@pytest.fixture(scope="session")
+def mock_paper():
+    from repro.engine.backend import MockBackend
+    return MockBackend()
+
+
+@pytest.fixture(scope="session")
+def tiny_db(mock_paper):
+    from repro.engine import tpch
+    return tpch.load(mock_paper, tpch.Scale.tiny())
+
+
+@pytest.fixture(autouse=True)
+def _reset_stats(request):
+    yield
+    for name in ("bfv_micro", "mock_paper"):
+        if name in request.fixturenames:
+            bk = request.getfixturevalue(name)
+            bk.stats.reset()
+            bk.op_log.clear()
+            bk.refresh_log.clear()

@@ -1,0 +1,109 @@
+"""RNS-BFV scheme correctness: roundtrips, homomorphic ops, noise model
+soundness (analytic bound must never exceed exact measured budget)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bfv import BFVContext
+from repro.core.encoder import BatchEncoder
+from repro.core.params import test_params as _tiny_params
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    p = _tiny_params()
+    c = BFVContext(p, seed=5)
+    return c, c.keygen(), BatchEncoder(p)
+
+
+def test_encrypt_decrypt_roundtrip(ctx):
+    c, keys, enc = ctx
+    rng = np.random.default_rng(0)
+    v = rng.integers(0, c.params.t, c.params.n)
+    ct = c.encrypt(enc.encode(v), keys.pk)
+    assert np.array_equal(np.asarray(enc.decode(c.decrypt(ct, keys.sk))), v)
+
+
+def test_homomorphic_add_sub_neg(ctx):
+    c, keys, enc = ctx
+    t, n = c.params.t, c.params.n
+    rng = np.random.default_rng(1)
+    a, b = rng.integers(0, t, n), rng.integers(0, t, n)
+    ca, cb = c.encrypt(enc.encode(a), keys.pk), c.encrypt(enc.encode(b), keys.pk)
+    assert np.array_equal(np.asarray(enc.decode(c.decrypt(c.add(ca, cb), keys.sk))), (a + b) % t)
+    assert np.array_equal(np.asarray(enc.decode(c.decrypt(c.sub(ca, cb), keys.sk))), (a - b) % t)
+    assert np.array_equal(np.asarray(enc.decode(c.decrypt(c.neg(ca), keys.sk))), (-a) % t)
+
+
+def test_homomorphic_mul_and_plain_ops(ctx):
+    c, keys, enc = ctx
+    t, n = c.params.t, c.params.n
+    rng = np.random.default_rng(2)
+    a, b = rng.integers(0, t, n), rng.integers(0, t, n)
+    ca, cb = c.encrypt(enc.encode(a), keys.pk), c.encrypt(enc.encode(b), keys.pk)
+    assert np.array_equal(np.asarray(enc.decode(c.decrypt(c.mul(ca, cb, keys.rlk), keys.sk))),
+                          a * b % t)
+    assert np.array_equal(np.asarray(enc.decode(c.decrypt(c.mul_plain(ca, enc.encode(b)), keys.sk))),
+                          a * b % t)
+    assert np.array_equal(np.asarray(enc.decode(c.decrypt(c.mul_scalar(ca, 7), keys.sk))),
+                          a * 7 % t)
+    assert np.array_equal(np.asarray(enc.decode(c.decrypt(c.add_scalar(ca, 9), keys.sk))),
+                          (a + 9) % t)
+    assert np.array_equal(np.asarray(enc.decode(c.decrypt(c.sub_from_scalar(1, ca), keys.sk))),
+                          (1 - a) % t)
+
+
+def test_rotation_and_rowswap(ctx):
+    c, keys, enc = ctx
+    t, n = c.params.t, c.params.n
+    half = n // 2
+    v = np.arange(n) % t
+    ct = c.encrypt(enc.encode(v), keys.pk)
+    for step in (1, 3, half - 1):
+        got = np.asarray(enc.decode(c.decrypt(c.rotate_rows(ct, step, keys.gks), keys.sk)))
+        exp = np.concatenate([np.roll(v[:half], -step), np.roll(v[half:], -step)]) % t
+        assert np.array_equal(got, exp), step
+    got = np.asarray(enc.decode(c.decrypt(c.swap_rows(ct, keys.gks), keys.sk)))
+    assert np.array_equal(got, np.concatenate([v[half:], v[:half]]) % t)
+
+
+def test_sum_slots(ctx):
+    c, keys, enc = ctx
+    t, n = c.params.t, c.params.n
+    rng = np.random.default_rng(3)
+    v = rng.integers(0, t, n)
+    ct = c.encrypt(enc.encode(v), keys.pk)
+    got = np.asarray(enc.decode(c.decrypt(c.sum_slots(ct, keys.gks), keys.sk)))
+    assert np.all(got == int(v.sum()) % t)
+
+
+def test_analytic_noise_is_conservative(ctx):
+    """Analytic budget must lower-bound the exact secret-key measurement
+    at every depth until failure."""
+    c, keys, enc = ctx
+    rng = np.random.default_rng(4)
+    v = rng.integers(0, c.params.t, c.params.n)
+    ct = c.encrypt(enc.encode(v), keys.pk)
+    exact = c.noise_budget_exact(ct, keys.sk)
+    assert ct.budget <= exact + 1e-6
+    cur = ct
+    for _ in range(3):
+        cur = c.mul(cur, cur, keys.rlk)
+        exact = c.noise_budget_exact(cur, keys.sk)
+        if exact <= 0:
+            break
+        assert cur.budget <= exact + 1e-6, "analytic bound too optimistic"
+
+
+@given(st.integers(0, 7680), st.integers(0, 7680))
+@settings(max_examples=10, deadline=None)
+def test_homomorphism_property(ctx, x, y):
+    """Dec(E(x) op E(y)) == x op y (mod t) — the core HE invariant."""
+    c, keys, enc = ctx
+    t = c.params.t
+    cx = c.encrypt(enc.encode(np.full(c.params.n, x)), keys.pk)
+    cy = c.encrypt(enc.encode(np.full(c.params.n, y)), keys.pk)
+    add = int(np.asarray(enc.decode(c.decrypt(c.add(cx, cy), keys.sk)))[0])
+    mul = int(np.asarray(enc.decode(c.decrypt(c.mul(cx, cy, keys.rlk), keys.sk)))[0])
+    assert add == (x + y) % t
+    assert mul == (x * y) % t

@@ -1,0 +1,107 @@
+"""Comparison circuits: exhaustive on the mock backend, spot-checked on
+real ciphertexts, plus hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compare as cmp
+from repro.core.noise import NoiseProfile
+from repro.engine.backend import BFVBackend, MockBackend
+
+
+def centered(z, p):
+    z = z % p
+    return z - p if z > p // 2 else z
+
+
+@pytest.fixture(scope="module")
+def mk257():
+    return MockBackend(NoiseProfile(n=512, t=257, k=12))
+
+
+def test_eq_exhaustive_mock(mk257):
+    p = mk257.t
+    zs = np.arange(p)
+    x = mk257.encrypt(zs)
+    for c in (0, 1, 128, 255):
+        got = mk257.decrypt(cmp.eq_scalar(mk257, x, c))[:p]
+        assert np.array_equal(got, (zs == c).astype(int)), c
+
+
+def test_lt_gt_le_ge_exhaustive_mock(mk257):
+    p = mk257.t
+    zs = np.arange(p)
+    x = mk257.encrypt(zs)
+    c = 100
+    cent = np.array([centered(z - c, p) for z in zs])
+    assert np.array_equal(mk257.decrypt(cmp.lt_scalar(mk257, x, c))[:p],
+                          (cent < 0).astype(int))
+    assert np.array_equal(mk257.decrypt(cmp.gt_scalar(mk257, x, c))[:p],
+                          (cent > 0).astype(int))
+    assert np.array_equal(mk257.decrypt(cmp.ge_scalar(mk257, x, c))[:p],
+                          (cent >= 0).astype(int))
+    assert np.array_equal(mk257.decrypt(cmp.le_scalar(mk257, x, c))[:p],
+                          (cent <= 0).astype(int))
+
+
+def test_between_in_and_bool_algebra(mk257):
+    p = mk257.t
+    zs = np.arange(p)
+    x = mk257.encrypt(zs)
+    got = mk257.decrypt(cmp.between_scalar(mk257, x, 10, 20))[:p]
+    assert np.array_equal(got, ((zs >= 10) & (zs <= 20)).astype(int))
+    got = mk257.decrypt(cmp.in_set(mk257, x, [1, 5, 77]))[:p]
+    assert np.array_equal(got, np.isin(zs, [1, 5, 77]).astype(int))
+    a = cmp.eq_scalar(mk257, x, 5)
+    b = cmp.eq_scalar(mk257, x, 7)
+    assert np.array_equal(mk257.decrypt(cmp.or_(mk257, a, b))[:p],
+                          np.isin(zs, [5, 7]).astype(int))
+    assert np.array_equal(mk257.decrypt(cmp.not_(mk257, a))[:p],
+                          (zs != 5).astype(int))
+
+
+def test_lt_depth_matches_table3(mk257):
+    """Table 3: comparison depth = ceil(log2(p-1)) + O(1)."""
+    import math
+    x = mk257.encrypt(np.arange(10))
+    lt = cmp.lt_scalar(mk257, x, 5)
+    eq_d = math.ceil(math.log2(mk257.t - 1))
+    assert lt.depth <= eq_d + 2
+
+
+def test_eq_lt_on_real_ciphertexts(bfv_micro):
+    bk = bfv_micro
+    vals = np.array([0, 1, 42, 99, 100, 101, 128, 200, 256])
+    x = bk.encrypt(vals)
+    assert np.array_equal(bk.decrypt(cmp.eq_scalar(bk, x, 42))[:9],
+                          (vals == 42).astype(int))
+    cent = np.array([centered(v - 100, 257) for v in vals])
+    assert np.array_equal(bk.decrypt(cmp.lt_scalar(bk, x, 100))[:9],
+                          (cent < 0).astype(int))
+    assert bk.stats.refresh == 0, "micro params must fit the LT circuit"
+
+
+def test_pow_ct_generic_exponent(mk257):
+    """Square-and-multiply path for non-power-of-two exponents."""
+    x = mk257.encrypt(np.arange(1, 20))
+    got = mk257.decrypt(cmp.pow_ct(mk257, x, 13))[:19]
+    exp = np.array([pow(int(v), 13, 257) for v in range(1, 20)])
+    assert np.array_equal(got, exp)
+
+
+@given(st.integers(0, 65536), st.integers(0, 65536))
+@settings(max_examples=20, deadline=None)
+def test_eq_property_paper_modulus(x, y):
+    bk = MockBackend()          # t = 65537
+    cx = bk.encrypt(np.array([x]))
+    got = int(bk.decrypt(cmp.eq_scalar(bk, cx, y))[0])
+    assert got == int(x == y)
+
+
+@given(st.integers(0, 32000), st.integers(0, 32000))
+@settings(max_examples=10, deadline=None)
+def test_lt_property_paper_modulus(x, y):
+    bk = MockBackend()
+    cx = bk.encrypt(np.array([x]))
+    got = int(bk.decrypt(cmp.lt_scalar(bk, cx, y))[0])
+    assert got == int(x < y), (x, y)

@@ -1,0 +1,77 @@
+"""Number theory + NTT reference correctness (unit + hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mathutil as mu
+from repro.core import ntt as nttm
+from repro.core.params import make_params
+
+
+@given(st.integers(2, 10**6))
+@settings(max_examples=200, deadline=None)
+def test_is_prime_matches_trial_division(n):
+    def trial(n):
+        if n < 2:
+            return False
+        d = 2
+        while d * d <= n:
+            if n % d == 0:
+                return False
+            d += 1
+        return True
+    assert mu.is_prime(n) == trial(n)
+
+
+@given(st.integers(1, 10**9), st.sampled_from([257, 7681, 65537, 786433]))
+@settings(max_examples=100, deadline=None)
+def test_modinv(a, p):
+    if a % p == 0:
+        return
+    assert a * mu.modinv(a, p) % p == 1
+
+
+def test_find_ntt_primes():
+    primes = mu.find_ntt_primes(256, 30, 5)
+    assert len(set(primes)) == 5
+    for q in primes:
+        assert mu.is_prime(q) and (q - 1) % 512 == 0 and q < 2**30
+
+
+@given(st.lists(st.integers(0, 2**29), min_size=3, max_size=3))
+@settings(max_examples=50, deadline=None)
+def test_crt_roundtrip(rs):
+    mods = [2**30 - 35, 2**30 - 77, 2**30 - 41]  # any coprime triple works
+    rs = [r % m for r, m in zip(rs, mods)]
+    X = mu.crt_reconstruct(rs, mods)
+    for r, m in zip(rs, mods):
+        assert X % m == r
+
+
+@pytest.mark.parametrize("n", [64, 256])
+def test_ntt_matches_naive_negacyclic(n):
+    p = make_params(n=n, t=257 if n <= 128 else 7681, k=2)
+    rng = np.random.default_rng(0)
+    q = p.Q.primes[0]
+    a = rng.integers(0, q, n)
+    b = rng.integers(0, q, n)
+    import jax.numpy as jnp
+    tabs = p.Q
+    got = nttm.polymul_ref(jnp.asarray(a[None, :]), jnp.asarray(b[None, :]),
+                           type("T", (), {"psi_rev": jnp.asarray(tabs.psi_rev[:1]),
+                                          "ipsi_rev": jnp.asarray(tabs.ipsi_rev[:1]),
+                                          "n_inv": jnp.asarray(tabs.n_inv[:1]),
+                                          "q": jnp.asarray(tabs.q[:1])}))
+    exp = nttm.negacyclic_naive(a, b, q)
+    assert np.array_equal(np.asarray(got)[0], exp)
+
+
+def test_ntt_roundtrip_all_limbs():
+    p = make_params(n=256, t=7681, k=3)
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.integers(0, np.array(p.Q.primes)[:, None], (p.k, p.n)))
+    f = nttm.ntt_ref(a, jnp.asarray(p.Q.psi_rev), jnp.asarray(p.Q.q))
+    back = nttm.intt_ref(f, jnp.asarray(p.Q.ipsi_rev), jnp.asarray(p.Q.n_inv),
+                         jnp.asarray(p.Q.q))
+    assert np.array_equal(np.asarray(back), np.asarray(a))

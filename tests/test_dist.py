@@ -1,0 +1,111 @@
+"""Distribution layer: sharding rules + the nshedb distributed step.
+
+Multi-device behaviour needs its own process (jax pins the device count
+at first init), so the mesh test shells out with
+xla_force_host_platform_device_count=16 and lowers a sharded step on a
+4x4 mesh — a miniature of what launch/dryrun.py does at 512.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+
+def test_nshedb_query_step_runs_and_stays_reduced():
+    """Smoke config on one device: output in range, shapes preserved."""
+    from repro.configs.nshedb import smoke
+    from repro.launch import nshedb_step as Q
+
+    cfg = smoke()
+    consts = Q.make_constants(cfg)
+    rng = np.random.default_rng(0)
+    nblocks = 4
+    q = consts["q"]
+    ct = rng.integers(0, q[None, None, :, None],
+                      (nblocks, 2, cfg.k, cfg.n)).astype(np.uint32)
+    ksk = rng.integers(0, q[None, :, None], (cfg.k, cfg.k, cfg.n)).astype(np.uint32)
+    out = jax.jit(lambda *a: Q.query_step(*a, eq_levels=cfg.eq_levels,
+                                          rot_steps=cfg.rot_steps))(
+        jnp.asarray(ct), jnp.asarray(ct), jnp.asarray(ksk), jnp.asarray(ksk),
+        jnp.asarray(ksk), jnp.asarray(ksk), jnp.asarray(consts["q"]),
+        jnp.asarray(consts["mu"]), jnp.asarray(consts["perm"]))
+    out = np.asarray(out)
+    assert out.shape == (2, cfg.k, cfg.n)
+    assert np.all(out < q[None, :, None]), "residues must stay reduced"
+
+
+def test_keyswitch_digit_contraction_is_exact():
+    """keyswitch() must equal the int64 reference contraction."""
+    from repro.configs.nshedb import smoke
+    from repro.launch import nshedb_step as Q
+
+    cfg = smoke()
+    consts = Q.make_constants(cfg)
+    rng = np.random.default_rng(1)
+    q = consts["q"].astype(np.int64)
+    poly = rng.integers(0, q[:, None], (cfg.k, cfg.n))
+    kb = rng.integers(0, q[None, :, None], (cfg.k, cfg.k, cfg.n))
+    ka = rng.integers(0, q[None, :, None], (cfg.k, cfg.k, cfg.n))
+    got_b, got_a = Q.keyswitch(jnp.asarray(poly, jnp.uint32),
+                               jnp.asarray(kb, jnp.uint32),
+                               jnp.asarray(ka, jnp.uint32),
+                               jnp.asarray(consts["q"]), jnp.asarray(consts["mu"]))
+    exp_b = (poly[:, None, :] * kb % q[None, :, None]).sum(0) % q[:, None]
+    exp_a = (poly[:, None, :] * ka % q[None, :, None]).sum(0) % q[:, None]
+    assert np.array_equal(np.asarray(got_b, dtype=np.int64), exp_b)
+    assert np.array_equal(np.asarray(got_a, dtype=np.int64), exp_a)
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import json
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.configs import get_smoke_config
+    from repro.dist.sharding import param_sharding, input_sharding
+    from repro.models import lm
+    from repro.train import steps as steps_mod
+    from repro.train.optim import adamw_init
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    cfg = get_smoke_config("qwen2-72b")
+    pshapes = jax.eval_shape(lambda k: lm.init_params(k, cfg, jnp.float32),
+                             jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pshard = param_sharding(pshapes, mesh)
+    # embed (vocab=128, d=64): vocab shards over model=4
+    assert pshard["embed"].spec == P("model", None), pshard["embed"].spec
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
+    bshard = input_sharding(batch, mesh)
+    oshapes = {"adam": jax.eval_shape(adamw_init, pshapes)}
+    oshard = {"adam": param_sharding(oshapes["adam"], mesh)}
+    step = steps_mod.make_train_step(cfg)
+    with mesh:
+        lowered = jax.jit(step, in_shardings=(pshard, oshard, bshard)).lower(
+            pshapes, oshapes, batch)
+        compiled = lowered.compile()
+    txt = compiled.as_text()
+    has_coll = any(k in txt for k in ("all-reduce", "all-gather", "reduce-scatter"))
+    print(json.dumps({"ok": True, "has_collectives": has_coll}))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_train_step_lowers_on_16_devices():
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SUBPROC], capture_output=True,
+                       text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["has_collectives"]

@@ -1,0 +1,103 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step
+on CPU asserting output shapes + no NaNs, prefill/decode consistency,
+and full-config parameter counts near their nominal sizes."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import lm
+from repro.train import steps as steps_mod
+
+NOMINAL_B = {
+    "mamba2-1.3b": 1.3, "recurrentgemma-9b": 9.0, "phi3.5-moe-42b": 42.0,
+    "deepseek-v2-236b": 236.0, "phi-3-vision-4.2b": 4.2, "gemma3-27b": 27.0,
+    "qwen2-72b": 72.0, "starcoder2-3b": 3.0, "gemma2-27b": 27.0,
+    "whisper-large-v3": 1.55,
+}
+
+
+def _batch(cfg, B, S, key):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.random.normal(key, (B, 8, cfg.d_model), jnp.float32)
+    if cfg.is_enc_dec:
+        batch["enc_embeds"] = jax.random.normal(key, (B, 16, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(key, cfg, jnp.float32)
+    B, S = 2, 32
+    batch = _batch(cfg, B, S, key)
+    logits, _ = lm.forward(params, cfg, tokens=batch["tokens"],
+                           patches=batch.get("patches"),
+                           enc_embeds=batch.get("enc_embeds"))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+    step = steps_mod.make_train_step(cfg, lr=1e-3)
+    opt = steps_mod.init_opt(cfg, params)
+    params2, opt2, metrics = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(opt2["adam"]["step"]) == 1
+    # parameters actually moved
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in
+                zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """decode(prefill(x[:-1]), x[-1]) must match forward(x) at the last
+    position — the KV-cache/state machinery is exact, not approximate."""
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(1)
+    params = lm.init_params(key, cfg, jnp.float32)
+    B, S = 2, 24
+    batch = _batch(cfg, B, S, key)
+    toks = batch["tokens"]
+    kw = {k: batch[k] for k in ("patches", "enc_embeds") if k in batch}
+
+    full_logits, _ = lm.forward(params, cfg, tokens=toks, **kw)
+
+    cache0 = lm.make_cache(cfg, B, 0, jnp.float32)
+    kw_p = dict(kw)
+    _, caches = lm.forward(params, cfg, tokens=toks[:, :-1], caches=cache0, **kw_p)
+    kw_d = {k: v for k, v in kw.items() if k != "patches"}
+    dec_logits, _ = lm.forward(params, cfg, tokens=toks[:, -1:], caches=caches,
+                               pos=S - 1, **kw_d)
+    if cfg.frontend == "vision":
+        pytest.skip("vision prefix makes last-token comparison position-dependent")
+    np.testing.assert_allclose(np.asarray(dec_logits[:, 0]),
+                               np.asarray(full_logits[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_param_count_near_nominal(arch):
+    n = lm.param_count(get_config(arch)) / 1e9
+    nom = NOMINAL_B[arch]
+    assert 0.75 * nom <= n <= 1.35 * nom, (arch, n, nom)
+
+
+def test_local_window_cache_is_bounded():
+    """gemma2-style local layers must cap their cache at the window."""
+    cfg = get_smoke_config("gemma2-27b")
+    key = jax.random.PRNGKey(2)
+    params = lm.init_params(key, cfg, jnp.float32)
+    B, S = 1, 64  # window is 16
+    cache0 = lm.make_cache(cfg, B, 0, jnp.float32)
+    _, caches = lm.forward(params, cfg,
+                           tokens=jax.random.randint(key, (B, S), 0, cfg.vocab),
+                           caches=cache0)
+    local_k = caches["units"][0]["k"]     # slot 0 = local
+    global_k = caches["units"][1]["k"]    # slot 1 = global
+    assert local_k.shape[2] == cfg.window
+    assert global_k.shape[2] == S

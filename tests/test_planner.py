@@ -1,0 +1,68 @@
+"""Noise-aware planner: the Table-3 depth model must bound measured
+depth; the i* injection rule; budget-level computation."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.engine import queries as Q
+from repro.engine.plan import And, Pred, eq_depth, lt_depth
+from repro.engine.planner import Planner, injection_depth, noise_budget_levels
+
+
+def test_budget_levels_paper_params(mock_paper):
+    """logQ=881-ish, t=65537, n=32768 -> ~25 levels (paper's LHE margin:
+    one EQ chain of 16 plus plan glue fits; two chained EQs do not)."""
+    b = noise_budget_levels(mock_paper)
+    assert 20 <= b <= 30, b
+    assert b > eq_depth(mock_paper.t) + 4          # one EQ + glue fits
+    assert b < 2 * eq_depth(mock_paper.t)          # two chained EQs do not
+
+
+def test_injection_depth_rule():
+    # D_i = (m - i) * d_s <= B
+    assert injection_depth(m_stages=3, d_s=17, budget=25) == 2
+    assert injection_depth(m_stages=3, d_s=17, budget=60) == 0
+    assert injection_depth(m_stages=3, d_s=17, budget=5) == 3  # pay one boot
+
+
+@pytest.mark.parametrize("qn", ["Q1", "Q6", "Q14", "Q12"])
+def test_depth_model_bounds_measurement(tiny_db, mock_paper, qn):
+    """Predicted depth (Table 3 composition) must be >= the measured max
+    multiplicative depth and within a small constant of it."""
+    plan_f, run_f, _ = Q.QUERIES[qn]
+    pl = Planner(tiny_db, optimized=True)
+    mock_paper.stats.reset()
+    run_f(pl)
+    measured = mock_paper.stats.max_depth
+    predicted = plan_f().total_depth(mock_paper.t, optimized=True)
+    assert measured <= predicted + 3, (measured, predicted)
+    assert predicted <= measured + 6, (measured, predicted)
+
+
+def test_optimized_depth_never_higher(tiny_db):
+    t = tiny_db.bk.t
+    for qn, (plan_f, _, _) in Q.QUERIES.items():
+        p = plan_f()
+        assert p.total_depth(t, True) <= p.total_depth(t, False), qn
+
+
+def test_fig3_q4_depth_reduction():
+    """Fig. 3: pull-up + late injection saves ~2 EQ depths on Q4-like
+    JOIN-WHERE pipelines."""
+    t = 65537
+    plan = Q.plan_q4()
+    d_opt = plan.total_depth(t, optimized=True)
+    d_orig = plan.total_depth(t, optimized=False)
+    assert d_orig - d_opt >= eq_depth(t) // 2
+
+
+def test_predicate_depths():
+    t = 65537
+    assert Pred("c", "=", 1).depth(t) == 16
+    assert Pred("c", "<", 1).depth(t) == 17
+    assert Pred("c", "between", (1, 2)).depth(t) == 18
+    a = And((Pred("c", "=", 1), Pred("d", "=", 2), Pred("e", "=", 3),
+             Pred("f", "=", 4)))
+    assert a.depth(t, True) == 16 + 2      # balanced tree
+    assert a.depth(t, False) == 16 + 3     # chain

@@ -1,0 +1,105 @@
+"""Hypothesis property tests on system-level invariants.
+
+The engine's correctness rests on a few algebraic facts about encrypted
+{0,1} masks and the homomorphism — these check them on randomized data
+rather than fixed fixtures.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compare as cmp
+from repro.core.noise import NoiseProfile
+from repro.engine.backend import MockBackend
+
+small_vecs = st.lists(st.integers(0, 100), min_size=4, max_size=24)
+
+
+def _bk():
+    return MockBackend(NoiseProfile(n=256, t=257, k=12))
+
+
+@given(small_vecs, st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_mask_idempotent(vals, c):
+    """Masks are {0,1}: m*m == m — the reason re-ANDing filters in the
+    unoptimized pipeline stays correct."""
+    bk = _bk()
+    x = bk.encrypt(np.array(vals))
+    m = cmp.eq_scalar(bk, x, c)
+    mm = bk.mul(m, m)
+    assert np.array_equal(bk.decrypt(m), bk.decrypt(mm))
+
+
+@given(small_vecs, st.integers(0, 100), st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_de_morgan(vals, a, b):
+    """NOT(x AND y) == NOT(x) OR NOT(y) over encrypted masks."""
+    bk = _bk()
+    x = bk.encrypt(np.array(vals))
+    mx = cmp.eq_scalar(bk, x, a)
+    my = cmp.lt_scalar(bk, x, b % 50)
+    lhs = cmp.not_(bk, cmp.and_(bk, mx, my))
+    rhs = cmp.or_(bk, cmp.not_(bk, mx), cmp.not_(bk, my))
+    assert np.array_equal(bk.decrypt(lhs), bk.decrypt(rhs))
+
+
+@given(small_vecs, st.integers(1, 50))
+@settings(max_examples=25, deadline=None)
+def test_trichotomy(vals, c):
+    """LT + EQ + GT == 1 for every slot (the sgn decomposition's core)."""
+    bk = _bk()
+    arr = np.array(vals)
+    x = bk.encrypt(arr)
+    total = bk.add(bk.add(cmp.lt_scalar(bk, x, c), cmp.eq_scalar(bk, x, c)),
+                   cmp.gt_scalar(bk, x, c))
+    assert np.all(bk.decrypt(total)[: len(vals)] == 1)
+
+
+@given(small_vecs, st.integers(0, 60), st.integers(0, 60))
+@settings(max_examples=20, deadline=None)
+def test_select_sum_linearity(vals, lo, hi):
+    """SUM over (A or B) + SUM over (A and B) == SUM over A + SUM over B
+    — inclusion/exclusion survives the encrypted masks + aggregation."""
+    bk = _bk()
+    lo, hi = min(lo, hi), max(lo, hi)
+    arr = np.array(vals)
+    x = bk.encrypt(arr)
+    v = bk.encrypt(arr)  # aggregate the values themselves
+    a = cmp.lt_scalar(bk, x, hi + 1)
+    b = cmp.ge_scalar(bk, x, lo)
+    union = cmp.or_(bk, a, b)
+    inter = cmp.and_(bk, a, b)
+    s = lambda m: int(bk.decrypt(bk.sum_slots(bk.mul(v, m)))[0])
+    assert (s(union) + s(inter)) % bk.t == (s(a) + s(b)) % bk.t
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_q6_style_query_randomized(seed):
+    """A Q6-shaped query on random data always matches plain numpy."""
+    bk = _bk()
+    rng = np.random.default_rng(seed)
+    n = 32
+    day = rng.integers(1, 101, n)
+    price = rng.integers(1, 101, n)
+    qty = rng.integers(1, 11, n)
+    cd, cq = int(rng.integers(2, 99)), int(rng.integers(2, 10))
+    xd, xp, xq = bk.encrypt(day), bk.encrypt(price), bk.encrypt(qty)
+    mask = cmp.and_(bk, cmp.lt_scalar(bk, xd, cd), cmp.ge_scalar(bk, xq, cq))
+    got = int(bk.decrypt(bk.sum_slots(bk.mul(xp, mask)))[0])
+    exp = int(price[(day < cd) & (qty >= cq)].sum()) % bk.t
+    assert got == exp
+
+
+@given(st.lists(st.integers(0, 256), min_size=2, max_size=16))
+@settings(max_examples=25, deadline=None)
+def test_rotate_then_sum_invariant(vals):
+    """sum_slots is rotation-invariant: aggregating a rotated column
+    gives the same total (the scan-first architecture's degree of
+    freedom in data placement)."""
+    bk = _bk()
+    x = bk.encrypt(np.array(vals))
+    s1 = int(bk.decrypt(bk.sum_slots(x))[0])
+    s2 = int(bk.decrypt(bk.sum_slots(bk.rotate(x, 3)))[0])
+    assert s1 == s2 == int(np.sum(vals)) % bk.t
