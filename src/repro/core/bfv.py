@@ -4,10 +4,26 @@ Layout conventions
 ------------------
 * polynomial:  (k, n) int64, limb-major, coefficients in [0, q_i)
 * ciphertext:  (2, k, n) — (c0, c1), coefficient domain
+* block batch: (nblocks, 2, k, n) — a whole column of ciphertext blocks
+               stacked on a leading axis (`CiphertextBatch`)
 * keys:        stored in NTT (evaluation) domain
 * key switch:  per-limb RNS gadget (digit i = centered residue mod q_i);
                the gadget matrix g_i mod q_j is exactly the identity, so
                the "encrypt g_i * s'" term touches only limb i.
+
+Batched evaluation path
+-----------------------
+Every arithmetic impl below is written against trailing (2, k, n) axes
+and broadcasts over any leading batch axes, so the same jitted code
+serves one ciphertext or a stacked column of blocks (one compilation per
+shape).  The limb-level hot loops — pointwise RNS mul/add/sub and the
+forward/inverse NTT — are routed through `core/limbops.LimbOps`, which
+dispatches to the Pallas kernels (`kernels/modops`, `kernels/ntt`) or to
+the pure-jnp `*_ref` oracles depending on the `backend` flag passed to
+`BFVContext` (default: the NSHEDB_LIMB_BACKEND env var, "auto" = Pallas
+on TPU, ref elsewhere; pass `interpret=True` to force kernel interpret
+mode on CPU).  Both paths produce bit-identical residues, so decryption
+results do not depend on the dispatch choice.
 
 All deterministic arithmetic is jitted; sampling happens host-side with a
 seeded numpy Generator so tests are reproducible.
@@ -16,13 +32,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import ntt as nttm
+from .limbops import LimbOps
 from .mathutil import centered, crt_reconstruct
 from .noise import NoiseModel
 from .params import HEParams
@@ -33,6 +48,30 @@ class Ciphertext:
     data: jnp.ndarray        # (2, k, n) int64, coefficient domain
     noise: float             # analytic log2 |invariant noise|
     params: HEParams
+
+    @property
+    def budget(self) -> float:
+        return -(self.noise + 1.0)
+
+
+@dataclasses.dataclass
+class CiphertextBatch:
+    """A stacked column of ciphertext blocks with one shared op history.
+
+    data is (nblocks, 2, k, n).  Blocks of an encrypted column go through
+    identical circuits, so a single analytic noise scalar — the max over
+    the stacked blocks — serves the whole batch.  When block noises do
+    differ (e.g. after a validity multiply on the last block), the max is
+    a *conservative* bound: batched plans never under-estimate noise
+    relative to the per-block loop.
+    """
+    data: jnp.ndarray        # (nblocks, 2, k, n) int64
+    noise: float
+    params: HEParams
+
+    @property
+    def nblocks(self) -> int:
+        return self.data.shape[0]
 
     @property
     def budget(self) -> float:
@@ -66,13 +105,21 @@ class Keys:
 
 
 class BFVContext:
-    """Binds a parameter set; owns jitted primitives and key material ops."""
+    """Binds a parameter set; owns jitted primitives and key material ops.
 
-    def __init__(self, params: HEParams, seed: int = 0):
+    `backend` / `interpret` select the limb-level execution path (see
+    module docstring); all ciphertext ops accept `Ciphertext` and
+    `CiphertextBatch` interchangeably and preserve the input type.
+    """
+
+    def __init__(self, params: HEParams, seed: int = 0,
+                 backend: str | None = None, interpret: bool | None = None):
         self.params = params
         self.noise_model = NoiseModel(params)
         self.rng = np.random.default_rng(seed)
         p = params
+        self.limb_q = LimbOps(p.Q, backend=backend, interpret=interpret)
+        self.limb_p = LimbOps(p.P, backend=backend, interpret=interpret)
         self.qQ = jnp.asarray(p.Q.q)
         self.psiQ = jnp.asarray(p.Q.psi_rev)
         self.ipsiQ = jnp.asarray(p.Q.ipsi_rev)
@@ -91,14 +138,36 @@ class BFVContext:
         self._galois_tabs = {
             g: (jnp.asarray(tab.src), jnp.asarray(tab.sign)) for g, tab in p.galois.items()
         }
-        # jitted primitives
-        self._ntt_q = jax.jit(lambda a: nttm.ntt_ref(a, self.psiQ, self.qQ))
-        self._intt_q = jax.jit(lambda a: nttm.intt_ref(a, self.ipsiQ, self.ninvQ, self.qQ))
+        # jitted primitives (shape-polymorphic: recompiled per batch shape)
+        self._ntt_q = jax.jit(self.limb_q.ntt)
+        self._intt_q = jax.jit(self.limb_q.intt)
         self._encrypt_j = jax.jit(self._encrypt_impl)
         self._decrypt_j = jax.jit(self._decrypt_impl)
         self._mul_j = jax.jit(self._mul_impl)
         self._mul_plain_j = jax.jit(self._mul_plain_impl)
         self._apply_galois_j = jax.jit(self._apply_galois_impl, static_argnums=1)
+
+    # --------------------------------------------------------- type glue
+    @staticmethod
+    def _like(ref, data, noise):
+        """Result wrapper preserving Ciphertext vs CiphertextBatch type."""
+        return dataclasses.replace(ref, data=data, noise=noise)
+
+    @staticmethod
+    def _pick(a, b):
+        """Of two operands, the one whose type the result should take
+        (the batched one, when single and batch are mixed)."""
+        return a if a.data.ndim >= b.data.ndim else b
+
+    def stack_cts(self, cts: list) -> CiphertextBatch:
+        """Stack single-block ciphertexts into one batch (pure layout)."""
+        assert cts and all(isinstance(c, Ciphertext) for c in cts)
+        return CiphertextBatch(jnp.stack([c.data for c in cts]),
+                               max(c.noise for c in cts), self.params)
+
+    def unstack_cts(self, batch: CiphertextBatch) -> list:
+        return [Ciphertext(batch.data[i], batch.noise, self.params)
+                for i in range(batch.nblocks)]
 
     # ------------------------------------------------------------- sampling
     def _sample_uniform_ntt(self) -> jnp.ndarray:
@@ -167,127 +236,136 @@ class BFVContext:
 
     def _encrypt_impl(self, m, u, e0, e1, pkb, pka):
         q = self.qQ[:, None]
-        u_ntt = self._ntt_q(u)
-        c0 = (self._intt_q(pkb * u_ntt % q) + e0 + self.delta[:, None] * m[None, :]) % q
-        c1 = (self._intt_q(pka * u_ntt % q) + e1) % q
+        lq = self.limb_q
+        u_ntt = lq.ntt(u)
+        c0 = (lq.intt(lq.mul(pkb, u_ntt)) + e0 + self.delta[:, None] * m[None, :]) % q
+        c1 = (lq.intt(lq.mul(pka, u_ntt)) + e1) % q
         return jnp.stack([c0, c1])
 
     def encrypt_zero(self, pk: PublicKey) -> Ciphertext:
         return self.encrypt(jnp.zeros(self.params.n, dtype=jnp.int64), pk)
 
     # ------------------------------------------------------------- decrypt
-    def decrypt(self, ct: Ciphertext, sk: SecretKey) -> jnp.ndarray:
+    def decrypt(self, ct, sk: SecretKey) -> jnp.ndarray:
+        """Decrypt a Ciphertext -> (n,) or a CiphertextBatch -> (nb, n)."""
         return self._decrypt_j(ct.data, sk.s_ntt)
 
     def _decrypt_impl(self, data, s_ntt):
         p = self.params
         q = self.qQ[:, None]
-        x = (data[0] + self._intt_q(self._ntt_q(data[1]) * s_ntt % q)) % q
+        lq = self.limb_q
+        c0, c1 = data[..., 0, :, :], data[..., 1, :, :]
+        x = (c0 + lq.intt(lq.mul(lq.ntt(c1), s_ntt))) % q
         hat_inv, _, _, q_inv_f = self.c_qp
         y = x * hat_inv[:, None] % q
         yt = y * p.t
-        int_part = jnp.sum(yt // q, axis=0)
-        frac = jnp.sum((yt % q).astype(jnp.float64) * q_inv_f[:, None], axis=0)
+        int_part = jnp.sum(yt // q, axis=-2)
+        frac = jnp.sum((yt % q).astype(jnp.float64) * q_inv_f[:, None], axis=-2)
         return (int_part + jnp.round(frac).astype(jnp.int64)) % p.t
 
     # ------------------------------------------------------- add/sub/neg
-    def add(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
-        return Ciphertext((a.data + b.data) % self.qQ[None, :, None],
-                          self.noise_model.add(a.noise, b.noise), self.params)
+    def add(self, a, b):
+        out = self._pick(a, b)
+        return self._like(out, (a.data + b.data) % self.qQ[:, None],
+                          self.noise_model.add(a.noise, b.noise))
 
-    def sub(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
-        return Ciphertext((a.data - b.data) % self.qQ[None, :, None],
-                          self.noise_model.add(a.noise, b.noise), self.params)
+    def sub(self, a, b):
+        out = self._pick(a, b)
+        return self._like(out, (a.data - b.data) % self.qQ[:, None],
+                          self.noise_model.add(a.noise, b.noise))
 
-    def neg(self, a: Ciphertext) -> Ciphertext:
-        return Ciphertext((-a.data) % self.qQ[None, :, None], a.noise, self.params)
+    def neg(self, a):
+        return self._like(a, (-a.data) % self.qQ[:, None], a.noise)
 
-    def add_plain(self, a: Ciphertext, m_poly: jnp.ndarray) -> Ciphertext:
-        c0 = (a.data[0] + self.delta[:, None] * jnp.asarray(m_poly)[None, :]) % self.qQ[:, None]
-        return Ciphertext(a.data.at[0].set(c0), self.noise_model.add(a.noise, a.noise), self.params)
+    def add_plain(self, a, m_poly: jnp.ndarray):
+        m = jnp.asarray(m_poly)
+        c0 = (a.data[..., 0, :, :] + self.delta[:, None] * m[None, :]) % self.qQ[:, None]
+        return self._like(a, a.data.at[..., 0, :, :].set(c0),
+                          self.noise_model.add(a.noise, a.noise))
 
-    def sub_from_plain(self, m_poly: jnp.ndarray, a: Ciphertext) -> Ciphertext:
+    def sub_from_plain(self, m_poly: jnp.ndarray, a):
         """Encrypted (m - a)."""
         return self.add_plain(self.neg(a), m_poly)
 
     # ------------------------------------------------------ plain multiply
-    def mul_plain(self, a: Ciphertext, m_poly: jnp.ndarray) -> Ciphertext:
+    def mul_plain(self, a, m_poly: jnp.ndarray):
         data = self._mul_plain_j(a.data, jnp.asarray(m_poly))
-        return Ciphertext(data, self.noise_model.mul_plain(a.noise), self.params)
+        return self._like(a, data, self.noise_model.mul_plain(a.noise))
 
     # ------------------------------------------------------ scalar constants
-    def mul_scalar(self, a: Ciphertext, c: int) -> Ciphertext:
+    def mul_scalar(self, a, c: int):
         """Multiply by the constant polynomial c — no NTT, tight noise growth."""
         c %= self.params.t
-        data = (a.data * c) % self.qQ[None, :, None]
-        return Ciphertext(data, self.noise_model.mul_scalar(a.noise, c), self.params)
+        data = (a.data * c) % self.qQ[:, None]
+        return self._like(a, data, self.noise_model.mul_scalar(a.noise, c))
 
-    def add_scalar(self, a: Ciphertext, c: int) -> Ciphertext:
+    def add_scalar(self, a, c: int):
         """Add the constant c to every slot.
 
         The batch encoding of the all-c vector is the constant polynomial c,
         so only coefficient 0 of c0 moves (by delta*c per limb)."""
         c %= self.params.t
-        c0 = a.data[0].at[:, 0].add(self.delta * c) % self.qQ[:, None]
-        return Ciphertext(a.data.at[0].set(c0),
-                          self.noise_model.add(a.noise, a.noise), self.params)
+        c0 = a.data[..., 0, :, :].at[..., 0].add(self.delta * c) % self.qQ[:, None]
+        return self._like(a, a.data.at[..., 0, :, :].set(c0),
+                          self.noise_model.add(a.noise, a.noise))
 
-    def sub_from_scalar(self, c: int, a: Ciphertext) -> Ciphertext:
+    def sub_from_scalar(self, c: int, a):
         """Encrypted (c - a) for scalar c."""
         return self.add_scalar(self.neg(a), c)
 
     def _mul_plain_impl(self, data, m):
-        q = self.qQ[:, None]
-        m_ntt = self._ntt_q(m[None, :] % q)
-        out0 = self._intt_q(self._ntt_q(data[0]) * m_ntt % q)
-        out1 = self._intt_q(self._ntt_q(data[1]) * m_ntt % q)
-        return jnp.stack([out0, out1])
+        lq = self.limb_q
+        m_ntt = lq.ntt(m[None, :] % self.qQ[:, None])
+        out0 = lq.intt(lq.mul(lq.ntt(data[..., 0, :, :]), m_ntt))
+        out1 = lq.intt(lq.mul(lq.ntt(data[..., 1, :, :]), m_ntt))
+        return jnp.stack([out0, out1], axis=-3)
 
     # ------------------------------------------------- HPS base conversion
     @staticmethod
     def _fbc(x, conv, in_mod, out_mod):
         """Exact fast base conversion of the centered value of x.
 
-        x: (ka, n) residues mod in_mod; conv: jnp'ed BaseConv tuple;
+        x: (..., ka, n) residues mod in_mod; conv: jnp'ed BaseConv tuple;
         out_mod: (kb,). Products stay < 2^62, exact in int64.
         """
         hat_inv, hat_mod_b, a_mod_b, a_inv = conv
         y = (x * hat_inv[:, None]) % in_mod[:, None]
-        v = jnp.round(jnp.sum(y.astype(jnp.float64) * a_inv[:, None], axis=0)).astype(jnp.int64)
-        terms = (y[:, None, :] * hat_mod_b[:, :, None]) % out_mod[None, :, None]
-        acc = jnp.sum(terms, axis=0)                       # (kb, n) < ka * b_j
-        out = (acc - v[None, :] * a_mod_b[:, None]) % out_mod[:, None]
+        v = jnp.round(jnp.sum(y.astype(jnp.float64) * a_inv[:, None], axis=-2)).astype(jnp.int64)
+        terms = (y[..., :, None, :] * hat_mod_b[:, :, None]) % out_mod[None, :, None]
+        acc = jnp.sum(terms, axis=-3)                      # (..., kb, n) < ka * b_j
+        out = (acc - v[..., None, :] * a_mod_b[:, None]) % out_mod[:, None]
         return out
 
     # ------------------------------------------------------- ct-ct multiply
-    def mul(self, a: Ciphertext, b: Ciphertext, rlk: KSwitchKey) -> Ciphertext:
+    def mul(self, a, b, rlk: KSwitchKey):
         data = self._mul_j(a.data, b.data, rlk.b, rlk.a)
         nz = self.noise_model
-        return Ciphertext(data, nz.keyswitch(nz.mul(a.noise, b.noise)), self.params)
+        return self._like(self._pick(a, b), data,
+                          nz.keyswitch(nz.mul(a.noise, b.noise)))
 
     def _mul_impl(self, da, db, rlk_b, rlk_a):
         p = self.params
         qQ, qP = self.qQ, self.qP
+        lq, lp = self.limb_q, self.limb_p
+        a0, a1 = da[..., 0, :, :], da[..., 1, :, :]
+        b0, b1 = db[..., 0, :, :], db[..., 1, :, :]
         # 1. lift to Q ∪ P
-        aP = jnp.stack([self._fbc(da[0], self.c_qp, qQ, qP), self._fbc(da[1], self.c_qp, qQ, qP)])
-        bP = jnp.stack([self._fbc(db[0], self.c_qp, qQ, qP), self._fbc(db[1], self.c_qp, qQ, qP)])
+        aP = (self._fbc(a0, self.c_qp, qQ, qP), self._fbc(a1, self.c_qp, qQ, qP))
+        bP = (self._fbc(b0, self.c_qp, qQ, qP), self._fbc(b1, self.c_qp, qQ, qP))
         # 2. NTT + tensor in both bases
-        nttq = self._ntt_q
-        nttp = lambda x: nttm.ntt_ref(x, self.psiP, qP)
-        inttp = lambda x: nttm.intt_ref(x, self.ipsiP, self.ninvP, qP)
-        fa = [nttq(da[0]), nttq(da[1])]
-        fb = [nttq(db[0]), nttq(db[1])]
-        ga = [nttp(aP[0]), nttp(aP[1])]
-        gb = [nttp(bP[0]), nttp(bP[1])]
+        fa = [lq.ntt(a0), lq.ntt(a1)]
+        fb = [lq.ntt(b0), lq.ntt(b1)]
+        ga = [lp.ntt(aP[0]), lp.ntt(aP[1])]
+        gb = [lp.ntt(bP[0]), lp.ntt(bP[1])]
         tq = [
-            self._intt_q(fa[0] * fb[0] % qQ[:, None]),
-            self._intt_q(((fa[0] * fb[1]) % qQ[:, None] + (fa[1] * fb[0]) % qQ[:, None]) % qQ[:, None]),
-            self._intt_q(fa[1] * fb[1] % qQ[:, None]),
+            lq.intt(lq.mul(fa[0], fb[0])),
+            lq.intt(lq.add(lq.mul(fa[0], fb[1]), lq.mul(fa[1], fb[0]))),
+            lq.intt(lq.mul(fa[1], fb[1])),
         ]
         tp = [
-            inttp(ga[0] * gb[0] % qP[:, None]),
-            inttp(((ga[0] * gb[1]) % qP[:, None] + (ga[1] * gb[0]) % qP[:, None]) % qP[:, None]),
-            inttp(gb[1] * ga[1] % qP[:, None]),
+            lp.intt(lp.mul(ga[0], gb[0])),
+            lp.intt(lp.add(lp.mul(ga[0], gb[1]), lp.mul(ga[1], gb[0]))),
+            lp.intt(lp.mul(gb[1], ga[1])),
         ]
         # 3. scale by t/Q exactly: r = (t*E - [tE]_Q) / Q, computed in base P
         rs = []
@@ -300,33 +378,35 @@ class BFVContext:
         ks0, ks1 = self._kswitch_inner(rs[2], rlk_b, rlk_a)
         c0 = (rs[0] + ks0) % qQ[:, None]
         c1 = (rs[1] + ks1) % qQ[:, None]
-        return jnp.stack([c0, c1])
+        return jnp.stack([c0, c1], axis=-3)
 
     # --------------------------------------------------------- key switch
     def _kswitch_inner(self, poly, ksk_b, ksk_a):
-        """Key-switch `poly` (coeff domain, (k,n)): returns coeff-domain pair."""
+        """Key-switch `poly` (coeff domain, (..., k, n)): coeff-domain pair."""
         q = self.qQ[:, None]
         qvec = self.qQ
         half = qvec // 2
+        lq = self.limb_q
         cent = poly - qvec[:, None] * (poly > half[:, None])       # centered digits
-        digits = cent[:, None, :] % qvec[None, :, None]            # (kd, k, n)
-        d_ntt = jax.vmap(lambda d: self._ntt_q(d))(digits)
-        acc_b = jnp.sum(d_ntt * ksk_b % q[None], axis=0) % q
-        acc_a = jnp.sum(d_ntt * ksk_a % q[None], axis=0) % q
-        return self._intt_q(acc_b), self._intt_q(acc_a)
+        digits = cent[..., :, None, :] % qvec[None, :, None]       # (..., kd, k, n)
+        d_ntt = lq.ntt(digits)
+        acc_b = jnp.sum(lq.mul(d_ntt, ksk_b), axis=-3) % q
+        acc_a = jnp.sum(lq.mul(d_ntt, ksk_a), axis=-3) % q
+        return lq.intt(acc_b), lq.intt(acc_a)
 
     # ------------------------------------------------------------ rotation
     def _apply_galois_impl(self, data, g: int):
         src, sign = self._galois_tabs[g]
-        return (sign[None, None, :] * data[:, :, src]) % self.qQ[None, :, None]
+        return (sign * data[..., src]) % self.qQ[:, None]
 
-    def apply_galois(self, ct: Ciphertext, g: int, gk: KSwitchKey) -> Ciphertext:
+    def apply_galois(self, ct, g: int, gk: KSwitchKey):
         rot = self._apply_galois_j(ct.data, g)
-        ks0, ks1 = self._kswitch_inner(rot[1], gk.b, gk.a)
-        c0 = (rot[0] + ks0) % self.qQ[:, None]
-        return Ciphertext(jnp.stack([c0, ks1]), self.noise_model.rotate(ct.noise), self.params)
+        ks0, ks1 = self._kswitch_inner(rot[..., 1, :, :], gk.b, gk.a)
+        c0 = (rot[..., 0, :, :] + ks0) % self.qQ[:, None]
+        return self._like(ct, jnp.stack([c0, ks1], axis=-3),
+                          self.noise_model.rotate(ct.noise))
 
-    def rotate_rows(self, ct: Ciphertext, step: int, gks: dict[int, KSwitchKey]) -> Ciphertext:
+    def rotate_rows(self, ct, step: int, gks: dict[int, KSwitchKey]):
         """Rotate both rows left by `step` (decomposed into power-of-two hops)."""
         p = self.params
         step %= p.row
@@ -340,12 +420,12 @@ class BFVContext:
             hop <<= 1
         return out
 
-    def swap_rows(self, ct: Ciphertext, gks: dict[int, KSwitchKey]) -> Ciphertext:
+    def swap_rows(self, ct, gks: dict[int, KSwitchKey]):
         g = self.params.rowswap_g
         return self.apply_galois(ct, g, gks[g])
 
     # --------------------------------------------------- slot-level helpers
-    def sum_slots(self, ct: Ciphertext, gks: dict[int, KSwitchKey]) -> Ciphertext:
+    def sum_slots(self, ct, gks: dict[int, KSwitchKey]):
         """Rotate-and-add tree: every slot ends up holding the full sum.
 
         log2(n/2) row rotations + 1 row swap (paper §4.2.2 COUNT/SUM).
@@ -357,12 +437,46 @@ class BFVContext:
             step *= 2
         return self.add(out, self.swap_rows(out, gks))
 
+    # ----------------------------------------------------- batched column API
+    def add_many(self, a_cts: list, b_cts: list) -> list:
+        """Blockwise a+b over two columns via one stacked call."""
+        return self.unstack_cts(self.add(self.stack_cts(a_cts), self.stack_cts(b_cts)))
+
+    def sub_many(self, a_cts: list, b_cts: list) -> list:
+        return self.unstack_cts(self.sub(self.stack_cts(a_cts), self.stack_cts(b_cts)))
+
+    def mul_plain_many(self, cts: list, m_poly: jnp.ndarray) -> list:
+        """One plaintext polynomial against every block of a column."""
+        return self.unstack_cts(self.mul_plain(self.stack_cts(cts), m_poly))
+
+    def mul_many(self, a_cts: list, b_cts: list, rlk: KSwitchKey) -> list:
+        """Blockwise ct-ct products (tensor + relin) in one stacked call."""
+        return self.unstack_cts(self.mul(self.stack_cts(a_cts), self.stack_cts(b_cts), rlk))
+
+    def rotate_rows_many(self, cts: list, step: int, gks: dict[int, KSwitchKey]) -> list:
+        return self.unstack_cts(self.rotate_rows(self.stack_cts(cts), step, gks))
+
+    def sum_slots_many(self, cts: list, gks: dict[int, KSwitchKey]) -> list:
+        return self.unstack_cts(self.sum_slots(self.stack_cts(cts), gks))
+
+    def fold_add(self, batch: CiphertextBatch) -> Ciphertext:
+        """Sum a batch across its block axis into one ciphertext — the
+        cross-block half of an aggregation.  Residues match the
+        sequential add chain exactly (mod-q sums commute); the noise
+        bound replays the same sequential `add` recurrence."""
+        data = jnp.sum(batch.data, axis=0) % self.qQ[:, None]
+        noise = batch.noise
+        for _ in range(batch.nblocks - 1):
+            noise = self.noise_model.add(noise, batch.noise)
+        return Ciphertext(data, noise, self.params)
+
     # ------------------------------------------------------- noise measure
     def noise_budget_exact(self, ct: Ciphertext, sk: SecretKey) -> float:
         """Exact invariant-noise budget in bits (host-side bigint; tests)."""
         p = self.params
         q = self.qQ[:, None]
-        x = np.asarray((ct.data[0] + self._intt_q(self._ntt_q(ct.data[1]) * sk.s_ntt % q)) % q)
+        lq = self.limb_q
+        x = np.asarray((ct.data[0] + lq.intt(lq.mul(lq.ntt(ct.data[1]), sk.s_ntt))) % q)
         m = np.asarray(self._decrypt_j(ct.data, sk.s_ntt))
         Q = p.bigQ()
         tQ = p.t * Q

@@ -1,0 +1,181 @@
+"""Batched limb-level dispatch: Pallas kernels vs pure-jnp reference.
+
+`LimbOps` binds one RNS base (an `NttTables`) and routes the hot
+primitives of BFV evaluation — pointwise mul/add/sub-mod and the
+forward/inverse negacyclic NTT — either through the Pallas kernels
+(`kernels/modops`, `kernels/ntt`) or through the pure-jnp `*_ref`
+oracles, selected by a backend flag:
+
+    "ref"     exact int64 jnp arithmetic (always available)
+    "pallas"  uint32 Barrett/Shoup kernels; interpret mode on CPU,
+              compiled on TPU
+    "auto"    "pallas" when running on a TPU, "ref" otherwise
+
+The default comes from the NSHEDB_LIMB_BACKEND environment variable
+("auto" if unset).  The Barrett path is tuned for primes in
+(2^28, 2^30); bases outside that window (e.g. the 31-bit HPS auxiliary
+base P) silently fall back to "ref" so a single flag can govern a whole
+parameter set.
+
+Every entry point accepts arrays of shape (..., k, n) — any number of
+leading batch axes over the (limb, coefficient) layout — and is safe to
+call from inside jit.  Batches are flattened to the (rows, n) layout the
+kernels grid over, with the per-limb twiddle/modulus tables tiled to
+match, so a whole column of ciphertext blocks runs as one kernel launch.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ntt as nttm
+from .params import NttTables
+from ..kernels.u32 import barrett_precompute
+from ..kernels.modops.modops import add_mod_pallas, mul_mod_pallas, sub_mod_pallas
+from ..kernels.ntt.ntt import ntt_fwd_pallas, ntt_inv_pallas
+
+BACKENDS = ("ref", "pallas", "auto")
+
+# Barrett window (kernels/u32.barrett_precompute): mu = 2^60/q < 2^32.
+_Q_MIN, _Q_MAX = 1 << 28, 1 << 30
+
+
+def default_backend() -> str:
+    return os.environ.get("NSHEDB_LIMB_BACKEND", "auto")
+
+
+def pallas_supported(primes) -> bool:
+    """True iff every modulus sits in the uint32 Barrett window."""
+    return all(_Q_MIN < int(q) < _Q_MAX for q in primes)
+
+
+def resolve_backend(backend: str | None, primes) -> str:
+    """Normalize a user flag to the backend that will actually run."""
+    b = backend or default_backend()
+    if b not in BACKENDS:
+        raise ValueError(f"unknown limb backend {b!r}; expected one of {BACKENDS}")
+    if b == "auto":
+        b = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if b == "pallas" and not pallas_supported(primes):
+        b = "ref"
+    return b
+
+
+class LimbOps:
+    """Pointwise + NTT primitives for one RNS base, kernel- or ref-backed."""
+
+    def __init__(self, tables: NttTables, backend: str | None = None,
+                 interpret: bool | None = None):
+        self.tables = tables
+        self.primes = tuple(int(q) for q in tables.primes)
+        self.k = len(self.primes)
+        self.n = tables.psi_rev.shape[1]
+        self.backend = resolve_backend(backend, self.primes)
+        self.interpret = (jax.default_backend() != "tpu"
+                          if interpret is None else interpret)
+        # ref tables (int64)
+        self.q = jnp.asarray(tables.q)
+        self.psi = jnp.asarray(tables.psi_rev)
+        self.ipsi = jnp.asarray(tables.ipsi_rev)
+        self.ninv = jnp.asarray(tables.n_inv)
+        if self.backend == "pallas":
+            q64 = np.asarray(tables.q, dtype=np.uint64)
+            self._q_u32 = jnp.asarray(q64.astype(np.uint32))
+            self._mu_u32 = jnp.asarray(
+                np.array([barrett_precompute(q) for q in self.primes],
+                         dtype=np.uint32))
+            psi = np.asarray(tables.psi_rev, dtype=np.uint64)
+            ipsi = np.asarray(tables.ipsi_rev, dtype=np.uint64)
+            ninv = np.asarray(tables.n_inv, dtype=np.uint64)
+            self._psi_u32 = jnp.asarray(psi.astype(np.uint32))
+            self._psi_shoup = jnp.asarray(((psi << np.uint64(32)) // q64[:, None]).astype(np.uint32))
+            self._ipsi_u32 = jnp.asarray(ipsi.astype(np.uint32))
+            self._ipsi_shoup = jnp.asarray(((ipsi << np.uint64(32)) // q64[:, None]).astype(np.uint32))
+            self._ninv_u32 = jnp.asarray(ninv.astype(np.uint32))
+            self._ninv_shoup = jnp.asarray(((ninv << np.uint64(32)) // q64).astype(np.uint32))
+
+    # --------------------------------------------------------- shape glue
+    def _rows(self, a):
+        """(..., k, n) -> (B*k, n) plus the batch factor B."""
+        assert a.shape[-2:] == (self.k, self.n), (a.shape, self.k, self.n)
+        B = 1
+        for d in a.shape[:-2]:
+            B *= d
+        return a.reshape(B * self.k, self.n), B
+
+    def _tile(self, tab, B: int):
+        """Tile a per-limb table (k, ...) to (B*k, ...) row layout."""
+        return jnp.concatenate([tab] * B, axis=0) if B > 1 else tab
+
+    # ----------------------------------------------------- pointwise ops
+    def _pointwise(self, a, b, kern_fn, ref_fn):
+        shape = jnp.broadcast_shapes(a.shape, b.shape)
+        a = jnp.broadcast_to(a, shape)
+        b = jnp.broadcast_to(b, shape)
+        if self.backend == "ref":
+            return ref_fn(a.reshape(-1, self.n), b.reshape(-1, self.n)).reshape(shape)
+        ar, B = self._rows(a)
+        br, _ = self._rows(b)
+        out = kern_fn(ar.astype(jnp.uint32), br.astype(jnp.uint32), B)
+        return out.astype(jnp.int64).reshape(shape)
+
+    def mul(self, a, b):
+        """Pointwise a*b mod q over (..., k, n); exact, result in [0, q)."""
+        return self._pointwise(
+            a, b,
+            lambda x, y, B: mul_mod_pallas(
+                x, y, self._tile(self._q_u32[:, None], B),
+                self._tile(self._mu_u32[:, None], B), interpret=self.interpret),
+            lambda x, y: (x * y) % self._row_q(x))
+
+    def add(self, a, b):
+        return self._pointwise(
+            a, b,
+            lambda x, y, B: add_mod_pallas(
+                x, y, self._tile(self._q_u32[:, None], B), interpret=self.interpret),
+            lambda x, y: (x + y) % self._row_q(x))
+
+    def sub(self, a, b):
+        return self._pointwise(
+            a, b,
+            lambda x, y, B: sub_mod_pallas(
+                x, y, self._tile(self._q_u32[:, None], B), interpret=self.interpret),
+            lambda x, y: (x - y) % self._row_q(x))
+
+    def _row_q(self, rows):
+        """(B*k,) -> (B*k, 1) modulus column for flattened-row ref math."""
+        B = rows.shape[0] // self.k
+        return self._tile(self.q, B)[:, None]
+
+    # -------------------------------------------------------------- NTT
+    def ntt(self, a):
+        """Forward negacyclic NTT over (..., k, n)."""
+        shape = a.shape
+        ar, B = self._rows(a)
+        if self.backend == "ref":
+            out = nttm.ntt_ref(ar, self._tile(self.psi, B), self._tile(self.q, B))
+        else:
+            out = ntt_fwd_pallas(
+                ar.astype(jnp.uint32), self._tile(self._psi_u32, B),
+                self._tile(self._psi_shoup, B), self._tile(self._q_u32[:, None], B),
+                interpret=self.interpret).astype(jnp.int64)
+        return out.reshape(shape)
+
+    def intt(self, a):
+        """Inverse negacyclic NTT over (..., k, n)."""
+        shape = a.shape
+        ar, B = self._rows(a)
+        if self.backend == "ref":
+            out = nttm.intt_ref(ar, self._tile(self.ipsi, B),
+                                self._tile(self.ninv, B), self._tile(self.q, B))
+        else:
+            out = ntt_inv_pallas(
+                ar.astype(jnp.uint32), self._tile(self._ipsi_u32, B),
+                self._tile(self._ipsi_shoup, B), self._tile(self._q_u32[:, None], B),
+                self._tile(self._ninv_u32[:, None], B),
+                self._tile(self._ninv_shoup[:, None], B),
+                interpret=self.interpret).astype(jnp.int64)
+        return out.reshape(shape)

@@ -10,6 +10,24 @@ either backend through the same method surface:
                 TPC-H benchmarks on CPU: the timing model multiplies op
                 counts by per-op costs calibrated on the real backend.
 
+Batched evaluation path
+-----------------------
+Both backends additionally operate on *block batches* — a whole column
+of ciphertext blocks stacked on a leading axis (`CiphertextBatch` for
+BFV, a (nblocks, slots) MockCipher for the mock).  `stack_blocks` /
+`unstack_blocks` convert between the engine's block lists and the
+batched handle; every arithmetic method accepts either form (and mixed
+single × batch operands, which broadcast), so the comparison circuits in
+core/compare.py evaluate an entire column per jitted call instead of one
+Python iteration per block.  OpStats counting is per *block*, not per
+call: an op on an 8-block batch charges 8, so refresh-free profiles are
+identical to the looped path.  Two deliberate approximations exist when
+blocks carry *non-uniform* noise: a batch tracks the conservative max
+(never under-estimating), and a mid-circuit refresh hits the stacked
+temporary rather than the stored column blocks — so refresh counts on
+noise-exhausted plans may differ from the looped schedule (decrypted
+results never do; see ROADMAP open items).
+
 Both count operations in OpStats and track (noise, depth) per value, so
 the planner's predictions are validated against the same model regardless
 of backend.  A `refresh` (the paper's "bootstrapping" event: client-side
@@ -20,11 +38,12 @@ these, the noise-optimized plans are expected to avoid them entirely.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import numpy as np
 
-from ..core.bfv import BFVContext, Ciphertext, Keys
+from ..core.bfv import BFVContext, Ciphertext, CiphertextBatch, Keys
 from ..core.encoder import BatchEncoder
 from ..core.noise import NoiseModel, NoiseProfile, paper_profile
 from ..core.params import HEParams
@@ -80,6 +99,13 @@ class _BackendBase:
     slots: int
     model: NoiseModel
 
+    def _nblocks(self, ct) -> int:
+        """Blocks carried by a value: batches charge per-block stats."""
+        raise NotImplementedError
+
+    def _count(self, *cts) -> int:
+        return max(self._nblocks(c) for c in cts)
+
     def _budget(self, noise: float) -> float:
         return self.model.budget(noise)
 
@@ -95,7 +121,7 @@ class _BackendBase:
             raise RuntimeError(
                 f"noise budget exhausted in {what} "
                 f"(post-op budget {self._budget(post_noise):.1f} bits)")
-        self.stats.refresh += 1
+        self.stats.refresh += self._nblocks(ct)
         self.refresh_log.append(what)
         self.refresh_inplace(ct)
         return ct
@@ -114,7 +140,7 @@ class _BackendBase:
         it *once* here rather than thrashing mid-circuit."""
         if self.levels_left(ct) >= levels:
             return ct
-        self.stats.refresh += 1
+        self.stats.refresh += self._nblocks(ct)
         self.refresh_log.append(f"planned(levels={levels})")
         self.refresh_inplace(ct)
         return ct
@@ -123,30 +149,67 @@ class _BackendBase:
     def sub_scalar(self, a, c: int):
         return self.add_scalar(a, -c % self.t)
 
+    # shared slot-movement compositions ----------------------------------
+    def sum_slots(self, a):
+        """All slots <- total sum (log2(n) rotate+add, paper §4.2.2)."""
+        out = a
+        step = 1
+        while step < self.slots // 2:
+            out = self.add(out, self.rotate(out, step))
+            step *= 2
+        return self.add(out, self.swap_rows(out))
+
+    def broadcast_slot(self, a, i: int):
+        """Extract slot i then replicate everywhere (paper §2.1.6)."""
+        basis = np.zeros(self.slots, dtype=np.int64)
+        basis[i] = 1
+        return self.sum_slots(self.mul_plain(a, basis))
+
 
 # ---------------------------------------------------------------------------
 # Real-ciphertext backend.
 # ---------------------------------------------------------------------------
 
 class BFVBackend(_BackendBase):
-    def __init__(self, params: HEParams, seed: int = 0):
+    def __init__(self, params: HEParams, seed: int = 0,
+                 kernel_backend: str | None = None, interpret: bool | None = None):
         super().__init__()
         self.params = params
         self.t = params.t
         self.slots = params.n
-        self.ctx = BFVContext(params, seed=seed)
+        self.ctx = BFVContext(params, seed=seed,
+                              backend=kernel_backend, interpret=interpret)
         self.keys: Keys = self.ctx.keygen()
         self.enc = BatchEncoder(params)
         self.model = self.ctx.noise_model
         self._depth: dict[int, int] = {}
 
+    def _nblocks(self, ct) -> int:
+        return ct.nblocks if isinstance(ct, CiphertextBatch) else 1
+
     # -- depth side-table (Ciphertext is a frozen-ish dataclass) ----------
-    def _d(self, ct: Ciphertext) -> int:
+    def _d(self, ct) -> int:
         return self._depth.get(id(ct), 0)
 
-    def _set_d(self, ct: Ciphertext, d: int) -> Ciphertext:
+    def _set_d(self, ct, d: int):
         self._depth[id(ct)] = self._track_depth(d)
         return ct
+
+    # -- block batching ---------------------------------------------------
+    def stack_blocks(self, blocks: list) -> CiphertextBatch:
+        """Stack a column's block list for one batched call (pure layout)."""
+        batch = self.ctx.stack_cts(blocks)
+        return self._set_d(batch, max(self._d(b) for b in blocks))
+
+    def unstack_blocks(self, batch: CiphertextBatch) -> list:
+        d = self._d(batch)
+        return [self._set_d(ct, d) for ct in self.ctx.unstack_cts(batch)]
+
+    def fold_blocks(self, batch: CiphertextBatch) -> Ciphertext:
+        """Cross-block sum of a batch (the inter-block half of SUM/COUNT).
+        Charges the same nblocks-1 adds as the sequential fold."""
+        self.stats.add += max(batch.nblocks - 1, 0)
+        return self._set_d(self.ctx.fold_add(batch), self._d(batch))
 
     # -- io ----------------------------------------------------------------
     def encrypt(self, vec) -> Ciphertext:
@@ -156,34 +219,42 @@ class BFVBackend(_BackendBase):
         v[: len(arr)] = arr
         return self._set_d(self.ctx.encrypt(self.enc.encode(v), self.keys.pk), 0)
 
-    def decrypt(self, ct: Ciphertext) -> np.ndarray:
-        self.stats.decrypt += 1
-        return np.asarray(self.enc.decode(self.ctx.decrypt(ct, self.keys.sk)))
+    def decrypt(self, ct) -> np.ndarray:
+        self.stats.decrypt += self._nblocks(ct)
+        polys = self.ctx.decrypt(ct, self.keys.sk)
+        if isinstance(ct, CiphertextBatch):
+            return np.stack([np.asarray(self.enc.decode(p)) for p in polys])
+        return np.asarray(self.enc.decode(polys))
 
     def refresh(self, ct: Ciphertext) -> Ciphertext:
         """Client-side re-encryption (NSHEDB's trust model allows it; the
         engine's planner exists to make sure this is never reached)."""
         return self.encrypt(self.decrypt(ct))
 
-    def refresh_inplace(self, ct: Ciphertext) -> None:
-        fresh = self.refresh(ct)
-        ct.data = fresh.data
-        ct.noise = fresh.noise
+    def refresh_inplace(self, ct) -> None:
+        if isinstance(ct, CiphertextBatch):
+            fresh = [self.refresh(b) for b in self.ctx.unstack_cts(ct)]
+            batch = self.ctx.stack_cts(fresh)
+            ct.data, ct.noise = batch.data, batch.noise
+        else:
+            fresh = self.refresh(ct)
+            ct.data = fresh.data
+            ct.noise = fresh.noise
         self._depth[id(ct)] = 0
 
-    def budget(self, ct: Ciphertext) -> float:
+    def budget(self, ct) -> float:
         return ct.budget
 
-    def depth(self, ct: Ciphertext) -> int:
+    def depth(self, ct) -> int:
         return self._d(ct)
 
     # -- ring ops ------------------------------------------------------------
     def add(self, a, b):
-        self.stats.add += 1
+        self.stats.add += self._count(a, b)
         return self._set_d(self.ctx.add(a, b), max(self._d(a), self._d(b)))
 
     def sub(self, a, b):
-        self.stats.add += 1
+        self.stats.add += self._count(a, b)
         return self._set_d(self.ctx.sub(a, b), max(self._d(a), self._d(b)))
 
     def neg(self, a):
@@ -195,32 +266,32 @@ class BFVBackend(_BackendBase):
             a = self._maybe_refresh(a, post, "mul")
             b = self._maybe_refresh(b, self.model.keyswitch(
                 self.model.mul(a.noise, b.noise)), "mul")
-        self.stats.mul += 1
+        self.stats.mul += self._count(a, b)
         out = self.ctx.mul(a, b, self.keys.rlk)
         return self._set_d(out, max(self._d(a), self._d(b)) + 1)
 
     def mul_plain(self, a, vec):
         post = self.model.mul_plain(a.noise)
         a = self._maybe_refresh(a, post, "mul_plain")
-        self.stats.mul_plain += 1
+        self.stats.mul_plain += self._count(a)
         poly = self.enc.encode(np.asarray(vec, dtype=np.int64) % self.t)
         return self._set_d(self.ctx.mul_plain(a, poly), self._d(a) + 1)
 
     def add_plain(self, a, vec):
-        self.stats.add += 1
+        self.stats.add += self._count(a)
         poly = self.enc.encode(np.asarray(vec, dtype=np.int64) % self.t)
         return self._set_d(self.ctx.add_plain(a, poly), self._d(a))
 
     def mul_scalar(self, a, c: int):
-        self.stats.mul_scalar += 1
+        self.stats.mul_scalar += self._count(a)
         return self._set_d(self.ctx.mul_scalar(a, c), self._d(a))
 
     def add_scalar(self, a, c: int):
-        self.stats.add += 1
+        self.stats.add += self._count(a)
         return self._set_d(self.ctx.add_scalar(a, c), self._d(a))
 
     def sub_from_scalar(self, c: int, a):
-        self.stats.add += 1
+        self.stats.add += self._count(a)
         return self._set_d(self.ctx.sub_from_scalar(c, a), self._d(a))
 
     def dot_plain(self, cts: list, coeffs) -> Ciphertext:
@@ -239,27 +310,12 @@ class BFVBackend(_BackendBase):
     # -- data movement ---------------------------------------------------
     def rotate(self, a, step: int):
         """Rotate rows (2 x n/2 layout) left by step."""
-        self.stats.rotate += bin(step % (self.slots // 2)).count("1")
+        self.stats.rotate += bin(step % (self.slots // 2)).count("1") * self._count(a)
         return self._set_d(self.ctx.rotate_rows(a, step, self.keys.gks), self._d(a))
 
     def swap_rows(self, a):
-        self.stats.rotate += 1
+        self.stats.rotate += self._count(a)
         return self._set_d(self.ctx.swap_rows(a, self.keys.gks), self._d(a))
-
-    def sum_slots(self, a):
-        """All slots <- total sum (log2(n) rotate+add, paper §4.2.2)."""
-        out = a
-        step = 1
-        while step < self.slots // 2:
-            out = self.add(out, self.rotate(out, step))
-            step *= 2
-        return self.add(out, self.swap_rows(out))
-
-    def broadcast_slot(self, a, i: int):
-        """Extract slot i then replicate everywhere (paper §2.1.6)."""
-        basis = np.zeros(self.slots, dtype=np.int64)
-        basis[i] = 1
-        return self.sum_slots(self.mul_plain(a, basis))
 
 
 # ---------------------------------------------------------------------------
@@ -268,7 +324,7 @@ class BFVBackend(_BackendBase):
 
 @dataclasses.dataclass
 class MockCipher:
-    vec: np.ndarray          # (slots,) int64 in [0, t)
+    vec: np.ndarray          # (slots,) — or (nblocks, slots) for a batch
     noise: float             # analytic log2 |invariant noise|
     depth: int = 0
 
@@ -279,14 +335,44 @@ class MockCipher:
 class MockBackend(_BackendBase):
     """Executes the operator DAG on plaintext arrays mod t while charging
     the exact same noise/ops as the BFV path.  The paper-scale profile
-    (n=32768, k=30 limbs) is the default."""
+    (n=32768, k=30 limbs) is the default.
 
-    def __init__(self, profile: NoiseProfile | None = None):
+    `kernel_reduce=True` routes the data half of `sum_slots` through the
+    Pallas rotate-reduce kernel (kernels/rotate_reduce) — one launch for
+    all log2(n) doubling stages — while charging the identical
+    rotate/add/noise accounting as the looped schedule."""
+
+    def __init__(self, profile: NoiseProfile | None = None, *,
+                 kernel_reduce: bool = False):
         super().__init__()
         self.profile = profile or paper_profile()
         self.t = self.profile.t
         self.slots = self.profile.n
         self.model = NoiseModel(self.profile)
+        self.kernel_reduce = kernel_reduce
+
+    def _nblocks(self, ct) -> int:
+        return ct.vec.shape[0] if ct.vec.ndim == 2 else 1
+
+    # -- block batching ---------------------------------------------------
+    def stack_blocks(self, blocks: list) -> MockCipher:
+        assert all(b.vec.ndim == 1 for b in blocks)
+        return MockCipher(np.stack([b.vec for b in blocks]),
+                          max(b.noise for b in blocks),
+                          max(b.depth for b in blocks))
+
+    def unstack_blocks(self, batch: MockCipher) -> list:
+        return [MockCipher(batch.vec[i].copy(), batch.noise, batch.depth)
+                for i in range(batch.vec.shape[0])]
+
+    def fold_blocks(self, batch: MockCipher) -> MockCipher:
+        nb = self._nblocks(batch)
+        self.stats.add += max(nb - 1, 0)
+        noise = batch.noise
+        for _ in range(nb - 1):
+            noise = self.model.add(noise, batch.noise)
+        return MockCipher(batch.vec.sum(axis=0) % self.t, noise,
+                          self._track_depth(batch.depth))
 
     # -- io ----------------------------------------------------------------
     def encrypt(self, vec) -> MockCipher:
@@ -297,7 +383,7 @@ class MockBackend(_BackendBase):
         return MockCipher(v, self.model.fresh(), 0)
 
     def decrypt(self, ct: MockCipher) -> np.ndarray:
-        self.stats.decrypt += 1
+        self.stats.decrypt += self._nblocks(ct)
         return ct.vec.copy()
 
     def refresh(self, ct: MockCipher) -> MockCipher:
@@ -315,13 +401,13 @@ class MockBackend(_BackendBase):
 
     # -- ring ops ------------------------------------------------------------
     def add(self, a, b):
-        self.stats.add += 1
+        self.stats.add += self._count(a, b)
         return MockCipher((a.vec + b.vec) % self.t,
                           self.model.add(a.noise, b.noise),
                           self._track_depth(max(a.depth, b.depth)))
 
     def sub(self, a, b):
-        self.stats.add += 1
+        self.stats.add += self._count(a, b)
         return MockCipher((a.vec - b.vec) % self.t,
                           self.model.add(a.noise, b.noise),
                           self._track_depth(max(a.depth, b.depth)))
@@ -335,14 +421,14 @@ class MockBackend(_BackendBase):
             a = self._maybe_refresh(a, post, "mul")
             b = self._maybe_refresh(
                 b, self.model.keyswitch(self.model.mul(a.noise, b.noise)), "mul")
-        self.stats.mul += 1
+        self.stats.mul += self._count(a, b)
         return MockCipher((a.vec * b.vec) % self.t,
                           self.model.keyswitch(self.model.mul(a.noise, b.noise)),
                           self._track_depth(max(a.depth, b.depth) + 1))
 
     def mul_plain(self, a, vec):
         a = self._maybe_refresh(a, self.model.mul_plain(a.noise), "mul_plain")
-        self.stats.mul_plain += 1
+        self.stats.mul_plain += self._count(a)
         v = np.zeros(self.slots, dtype=np.int64)
         arr = np.asarray(vec, dtype=np.int64) % self.t
         v[: len(arr)] = arr
@@ -350,24 +436,24 @@ class MockBackend(_BackendBase):
                           self._track_depth(a.depth + 1))
 
     def add_plain(self, a, vec):
-        self.stats.add += 1
+        self.stats.add += self._count(a)
         v = np.zeros(self.slots, dtype=np.int64)
         arr = np.asarray(vec, dtype=np.int64) % self.t
         v[: len(arr)] = arr
         return MockCipher((a.vec + v) % self.t, self.model.add(a.noise, a.noise), a.depth)
 
     def mul_scalar(self, a, c: int):
-        self.stats.mul_scalar += 1
+        self.stats.mul_scalar += self._count(a)
         return MockCipher((a.vec * (c % self.t)) % self.t,
                           self.model.mul_scalar(a.noise, c), a.depth)
 
     def add_scalar(self, a, c: int):
-        self.stats.add += 1
+        self.stats.add += self._count(a)
         return MockCipher((a.vec + c) % self.t,
                           self.model.add(a.noise, a.noise), a.depth)
 
     def sub_from_scalar(self, c: int, a):
-        self.stats.add += 1
+        self.stats.add += self._count(a)
         return MockCipher((c - a.vec) % self.t,
                           self.model.add(a.noise, a.noise), a.depth)
 
@@ -377,12 +463,14 @@ class MockBackend(_BackendBase):
         cs = np.asarray(coeffs, dtype=np.int64) % self.t
         nz = [i for i in range(len(cts)) if cs[i] != 0]
         assert nz, "all-zero dot"
-        self.stats.mul_scalar += len(nz)
-        self.stats.add += max(0, len(nz) - 1)
-        out = np.zeros(self.slots, dtype=np.int64)
-        for i in nz:                       # in-place FMA; products < 2^34,
-            out += cts[i].vec * cs[i]      # sums < 2^34 * 2^15 — exact int64
-        out %= self.t
+        nb = self._count(*[cts[i] for i in nz])
+        self.stats.mul_scalar += len(nz) * nb
+        self.stats.add += max(0, len(nz) - 1) * nb
+        out = None
+        for i in nz:                       # products < 2^34, running sums
+            term = cts[i].vec * cs[i]      # < 2^34 * 2^15 — exact int64
+            out = term if out is None else out + term
+        out = out % self.t
         noises = [self.model.mul_scalar(cts[i].noise, int(cs[i])) for i in nz]
         depth = max(cts[i].depth for i in nz)
         return MockCipher(out, self.model.add_many(noises), self._track_depth(depth))
@@ -390,29 +478,39 @@ class MockBackend(_BackendBase):
     # -- data movement ---------------------------------------------------
     def rotate(self, a, step: int):
         """Row-rotation semantics matching the BFV 2 x n/2 slot layout."""
-        self.stats.rotate += bin(step % (self.slots // 2)).count("1")
+        self.stats.rotate += bin(step % (self.slots // 2)).count("1") * self._count(a)
         half = self.slots // 2
-        vec = np.concatenate([np.roll(a.vec[:half], -step), np.roll(a.vec[half:], -step)])
+        vec = np.concatenate([np.roll(a.vec[..., :half], -step, axis=-1),
+                              np.roll(a.vec[..., half:], -step, axis=-1)], axis=-1)
         return MockCipher(vec, self.model.rotate(a.noise), a.depth)
 
     def swap_rows(self, a):
-        self.stats.rotate += 1
+        self.stats.rotate += self._count(a)
         half = self.slots // 2
-        vec = np.concatenate([a.vec[half:], a.vec[:half]])
+        vec = np.concatenate([a.vec[..., half:], a.vec[..., :half]], axis=-1)
         return MockCipher(vec, self.model.rotate(a.noise), a.depth)
 
     def sum_slots(self, a):
-        out = a
-        step = 1
-        while step < self.slots // 2:
-            out = self.add(out, self.rotate(out, step))
-            step *= 2
-        return self.add(out, self.swap_rows(out))
-
-    def broadcast_slot(self, a, i: int):
-        basis = np.zeros(self.slots, dtype=np.int64)
-        basis[i] = 1
-        return self.sum_slots(self.mul_plain(a, basis))
+        if not self.kernel_reduce:
+            return super().sum_slots(a)
+        # Pallas rotate-reduce kernel: one launch replaces the whole
+        # doubling schedule.  Accounting replays the looped recurrence
+        # v <- add(v, rotate(v)) so stats/noise stay bit-identical.
+        from ..kernels.rotate_reduce.ops import rotate_reduce
+        half = self.slots // 2
+        steps = int(math.log2(half)) + 1            # log rotations + row swap
+        nb = self._nblocks(a)
+        self.stats.add += steps * nb
+        self.stats.rotate += steps * nb
+        noise = a.noise
+        for _ in range(steps):
+            noise = self.model.add(noise, self.model.rotate(noise))
+        rows = a.vec.reshape(-1, half)              # (2*nb, half) half-rows
+        red = np.asarray(rotate_reduce(rows, self.t), dtype=np.int64)
+        red = red.reshape(-1, 2, half)
+        total = (red[:, 0] + red[:, 1]) % self.t    # (nb, half) full sums
+        vec = np.concatenate([total, total], axis=-1).reshape(a.vec.shape)
+        return MockCipher(vec, noise, self._track_depth(a.depth))
 
 
 Backend = Any  # duck type: BFVBackend | MockBackend

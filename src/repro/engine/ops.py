@@ -4,6 +4,14 @@ Every operator maps over the ciphertext blocks of a column — there is no
 positional access (Table 1).  All functions take the backend `bk` first
 and work identically on BFVBackend and MockBackend.
 
+Column-at-a-time execution: operators stack a column's block list into
+one batched handle (`bk.stack_blocks`), run the circuit once — the
+comparison circuits in core/compare.py are backend-polymorphic, so a
+single pass evaluates every block through one jitted call per primitive
+— and unstack at the boundary.  Blocks share an op history, so OpStats
+and the planner's noise/depth model are identical to the per-block loop;
+singleton columns skip the batch layer entirely.
+
 Masks are lists of blocks of encrypted {0,1}; aggregates are single
 ciphertexts with the result replicated in every slot (the paper's
 fixed-size output leakage).
@@ -15,6 +23,28 @@ import numpy as np
 from ..core import compare as cmp
 from .plan import Factor, Pred
 from .storage import EncryptedColumn, EncryptedTable
+
+
+# ---------------------------------------------------------------------------
+# Block-batch plumbing.
+# ---------------------------------------------------------------------------
+
+def _stacked(bk, blocks: list):
+    """Stack a block list for one batched call; singletons pass through."""
+    if len(blocks) == 1:
+        return blocks[0], False
+    return bk.stack_blocks(blocks), True
+
+
+def _unstacked(bk, out, batched: bool) -> list:
+    return bk.unstack_blocks(out) if batched else [out]
+
+
+def mul_lists(bk, xs: list, ys: list) -> list:
+    """Blockwise ct x ct product of two aligned block lists."""
+    x, batched = _stacked(bk, xs)
+    y, _ = _stacked(bk, ys)
+    return _unstacked(bk, bk.mul(x, y), batched)
 
 
 # ---------------------------------------------------------------------------
@@ -62,7 +92,8 @@ def _col_cmp(bk, ct_l, op: str, ct_r) -> object:
 
 
 def pred_mask(bk, table: EncryptedTable, pred: Pred, col_override=None) -> list:
-    """Evaluate one predicate over every block of its column(s).
+    """Evaluate one predicate over every block of its column(s) — the
+    whole column runs through one batched comparison circuit.
 
     col_override substitutes pre-masked blocks (the unoptimized pipeline
     evaluates comparisons on filtered columns — that is the point)."""
@@ -70,7 +101,9 @@ def pred_mask(bk, table: EncryptedTable, pred: Pred, col_override=None) -> list:
     blocks = col_override if col_override is not None else col.blocks
     if pred.rhs_col is not None:
         rhs = table.col(pred.rhs_col).blocks
-        return [_col_cmp(bk, a, pred.op, b) for a, b in zip(blocks, rhs)]
+        lhs_b, batched = _stacked(bk, blocks)
+        rhs_b, _ = _stacked(bk, rhs)
+        return _unstacked(bk, _col_cmp(bk, lhs_b, pred.op, rhs_b), batched)
     spec = col.spec
     if pred.op == "between":
         v = (spec.encode_scalar(pred.value[0]), spec.encode_scalar(pred.value[1]))
@@ -78,7 +111,8 @@ def pred_mask(bk, table: EncryptedTable, pred: Pred, col_override=None) -> list:
         v = [spec.encode_scalar(x) for x in pred.value]
     else:
         v = spec.encode_scalar(pred.value)
-    return [_scalar_cmp(bk, ct, pred.op, v) for ct in blocks]
+    x, batched = _stacked(bk, blocks)
+    return _unstacked(bk, _scalar_cmp(bk, x, pred.op, v), batched)
 
 
 # ---------------------------------------------------------------------------
@@ -86,35 +120,55 @@ def pred_mask(bk, table: EncryptedTable, pred: Pred, col_override=None) -> list:
 # ---------------------------------------------------------------------------
 
 def and_masks(bk, masks: list[list]) -> list:
-    """Balanced product tree per block (R2 / §4.3.1)."""
-    nblocks = len(masks[0])
-    return [cmp.mul_tree(bk, [m[b] for m in masks]) for b in range(nblocks)]
+    """Balanced product tree per block (R2 / §4.3.1), all blocks batched."""
+    if len(masks[0]) == 1:
+        return [cmp.mul_tree(bk, [m[0] for m in masks])]
+    stacked = [bk.stack_blocks(m) for m in masks]
+    return bk.unstack_blocks(cmp.mul_tree(bk, stacked))
+
+
+def _chain_lists(bk, lists: list[list], combine) -> list:
+    """Sequential pairwise combine of block lists, stacking each column
+    once up front (not per step) and unstacking once at the end."""
+    if len(lists[0]) == 1:
+        out = lists[0][0]
+        for m in lists[1:]:
+            out = combine(out, m[0])
+        return [out]
+    stacked = [bk.stack_blocks(m) for m in lists]
+    out = stacked[0]
+    for m in stacked[1:]:
+        out = combine(out, m)
+    return bk.unstack_blocks(out)
 
 
 def and_masks_seq(bk, masks: list[list]) -> list:
     """Sequential chain — the unoptimized baseline."""
-    out = masks[0]
-    for m in masks[1:]:
-        out = [bk.mul(a, b) for a, b in zip(out, m)]
-    return out
+    return _chain_lists(bk, masks, bk.mul)
+
+
+def or_masks_seq(bk, masks: list[list]) -> list:
+    """Sequential OR chain — the unoptimized baseline."""
+    return _chain_lists(bk, masks, lambda a, b: cmp.or_(bk, a, b))
 
 
 def or_masks(bk, masks: list[list]) -> list:
-    nblocks = len(masks[0])
-    out = []
-    for b in range(nblocks):
-        layer = [m[b] for m in masks]
-        while len(layer) > 1:
-            nxt = [cmp.or_(bk, layer[i], layer[i + 1]) for i in range(0, len(layer) - 1, 2)]
-            if len(layer) % 2:
-                nxt.append(layer[-1])
-            layer = nxt
-        out.append(layer[0])
-    return out
+    if len(masks[0]) == 1:
+        stacked = [m[0] for m in masks]
+    else:
+        stacked = [bk.stack_blocks(m) for m in masks]
+    layer = stacked
+    while len(layer) > 1:
+        nxt = [cmp.or_(bk, layer[i], layer[i + 1]) for i in range(0, len(layer) - 1, 2)]
+        if len(layer) % 2:
+            nxt.append(layer[-1])
+        layer = nxt
+    return _unstacked(bk, layer[0], len(masks[0]) > 1)
 
 
 def not_mask(bk, mask: list) -> list:
-    return [cmp.not_(bk, m) for m in mask]
+    x, batched = _stacked(bk, mask)
+    return _unstacked(bk, cmp.not_(bk, x), batched)
 
 
 def apply_validity(bk, mask: list, table: EncryptedTable) -> list:
@@ -129,7 +183,7 @@ def apply_validity(bk, mask: list, table: EncryptedTable) -> list:
 
 def mask_columns(bk, blocks: list, mask: list) -> list:
     """Filter a column: col x mask (the SELECT of Eq. 5)."""
-    return [bk.mul(c, m) for c, m in zip(blocks, mask)]
+    return mul_lists(bk, blocks, mask)
 
 
 # ---------------------------------------------------------------------------
@@ -140,30 +194,29 @@ def expr_blocks(bk, table: EncryptedTable, factors: tuple, masked: dict | None =
     """Product of affine column factors: prod_f (f.add + f.mult * col_f)."""
     assert factors
     per_factor = []
+    batched = False
     for f in factors:
         src = (masked or {}).get(f.col) if masked else None
         blocks = src if src is not None else table.col(f.col).blocks
-        cur = []
-        for ct in blocks:
-            x = ct
-            if f.mult != 1:
-                x = bk.mul_scalar(x, f.mult)
-            if f.add != 0:
-                x = bk.add_scalar(x, f.add)
-            cur.append(x)
-        per_factor.append(cur)
+        x, batched = _stacked(bk, blocks)
+        if f.mult != 1:
+            x = bk.mul_scalar(x, f.mult)
+        if f.add != 0:
+            x = bk.add_scalar(x, f.add)
+        per_factor.append(x)
     out = per_factor[0]
     for nxt in per_factor[1:]:
-        out = [bk.mul(a, b) for a, b in zip(out, nxt)]
-    return out
+        out = bk.mul(out, nxt)
+    return _unstacked(bk, out, batched)
 
 
 def reduce_blocks(bk, blocks: list) -> object:
     """Sum across blocks then rotate-reduce within the ciphertext: the
     doubling pattern of §4.2.2 COUNT/SUM — result in every slot."""
-    acc = blocks[0]
-    for b in blocks[1:]:
-        acc = bk.add(acc, b)
+    if len(blocks) == 1:
+        acc = blocks[0]
+    else:
+        acc = bk.fold_blocks(bk.stack_blocks(blocks))
     return bk.sum_slots(acc)
 
 
@@ -183,15 +236,12 @@ def partial_sums(bk, value_blocks: list, mask: list, chunk: int) -> list:
     exactly — avoids mod-t wraparound for big aggregates at *fewer*
     rotations than the full reduction."""
     filtered = mask_columns(bk, value_blocks, mask)
-    outs = []
-    for ct in filtered:
-        out = ct
-        step = 1
-        while step < chunk:
-            out = bk.add(out, bk.rotate(out, step))
-            step *= 2
-        outs.append(out)
-    return outs
+    out, batched = _stacked(bk, filtered)
+    step = 1
+    while step < chunk:
+        out = bk.add(out, bk.rotate(out, step))
+        step *= 2
+    return _unstacked(bk, out, batched)
 
 
 # ---------------------------------------------------------------------------
@@ -201,8 +251,8 @@ def partial_sums(bk, value_blocks: list, mask: list, chunk: int) -> list:
 def group_masks(bk, table: EncryptedTable, col: str, domain: list[int]) -> list[tuple[int, list]]:
     """One EQ mask per distinct value — GROUP BY (§4.2.2) and ORDER BY
     (§4.2.3, enumerate the dictionary in order)."""
-    blocks = table.col(col).blocks
-    return [(v, [cmp.eq_scalar(bk, ct, int(v)) for ct in blocks]) for v in domain]
+    x, batched = _stacked(bk, table.col(col).blocks)
+    return [(v, _unstacked(bk, cmp.eq_scalar(bk, x, int(v)), batched)) for v in domain]
 
 
 def sort_column(bk, table: EncryptedTable, col: str, domain: list[int],
@@ -249,8 +299,9 @@ def sort_column(bk, table: EncryptedTable, col: str, domain: list[int],
 
 def fk_masks(bk, table: EncryptedTable, fk: str, nparent: int) -> list[list]:
     """EQ masks for every dense parent key 1..nparent (JOIN step 2)."""
-    blocks = table.col(fk).blocks
-    return [[cmp.eq_scalar(bk, ct, j + 1) for ct in blocks] for j in range(nparent)]
+    x, batched = _stacked(bk, table.col(fk).blocks)
+    return [_unstacked(bk, cmp.eq_scalar(bk, x, j + 1), batched)
+            for j in range(nparent)]
 
 
 def pack_scalars(bk, scalar_cts: list) -> object:
@@ -276,6 +327,10 @@ def translate_mask_down(bk, parent_mask_block, fact_table: EncryptedTable,
     EQ the fk column, multiply, accumulate (Fig. 2 steps 1-3).
     Cost O(nparent * nblocks) ops — Table 2's JOIN row.
 
+    The fk column is stacked once and every per-key EQ runs batched over
+    all its blocks; the broadcast mask bit joins by broadcasting into the
+    batch (single x batch products are supported by both backends).
+
     The parent mask is refreshed *once* here if it cannot absorb the hop
     (planned, not per-key: the i* model's pay-one-bootstrap branch).
 
@@ -283,14 +338,7 @@ def translate_mask_down(bk, parent_mask_block, fact_table: EncryptedTable,
     joins over already-filtered columns (Fig. 3(a)'s deep chains)."""
     parent_mask_block = bk.ensure_levels(parent_mask_block, 6)
     fact_blocks = fk_override if fk_override is not None else fact_table.col(fk).blocks
-    out = [None] * len(fact_blocks)
-    for j in range(nparent):
-        mj = bk.broadcast_slot(parent_mask_block, j)          # encrypted bit
-        for b, fct in enumerate(fact_blocks):
-            e = cmp.eq_scalar(bk, fct, j + 1)
-            term = bk.mul(e, mj)
-            out[b] = term if out[b] is None else bk.add(out[b], term)
-    return out
+    return _translate_down(bk, parent_mask_block, fact_blocks, nparent)
 
 
 def translate_values_down(bk, packed_values, fact_table: EncryptedTable,
@@ -299,15 +347,19 @@ def translate_values_down(bk, packed_values, fact_table: EncryptedTable,
     rows: child_val[r] = value[key(r)].  Used by correlated subqueries
     (Q17's per-part AVG)."""
     packed_values = bk.ensure_levels(packed_values, 6)
-    fact_blocks = fact_table.col(fk).blocks
-    out = [None] * len(fact_blocks)
+    return _translate_down(bk, packed_values, fact_table.col(fk).blocks, nparent)
+
+
+def _translate_down(bk, packed, fact_blocks: list, nparent: int) -> list:
+    """Shared FK scatter: sum_j EQ(fk, j+1) x broadcast(packed, j)."""
+    x, batched = _stacked(bk, fact_blocks)
+    out = None
     for j in range(nparent):
-        vj = bk.broadcast_slot(packed_values, j)
-        for b, fct in enumerate(fact_blocks):
-            e = cmp.eq_scalar(bk, fct, j + 1)
-            term = bk.mul(e, vj)
-            out[b] = term if out[b] is None else bk.add(out[b], term)
-    return out
+        pj = bk.broadcast_slot(packed, j)         # encrypted bit / value
+        e = cmp.eq_scalar(bk, x, j + 1)
+        term = bk.mul(e, pj)
+        out = term if out is None else bk.add(out, term)
+    return _unstacked(bk, out, batched)
 
 
 def join_aggregate(bk, fact_table: EncryptedTable, fk: str, nparent: int,
@@ -320,7 +372,7 @@ def join_aggregate(bk, fact_table: EncryptedTable, fk: str, nparent: int,
     for j in range(nparent):
         m = masks[j]
         if extra_mask is not None:
-            m = [bk.mul(a, b) for a, b in zip(m, extra_mask)]
+            m = mul_lists(bk, m, extra_mask)
         if value_blocks is None:
             results.append(count(bk, m))
         else:

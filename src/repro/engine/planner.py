@@ -114,13 +114,9 @@ class Planner:
         if isinstance(expr, Not):
             return ops.not_mask(bk, self._mask_seq(table, expr.child))
         kids = [self._mask_seq(table, c) for c in expr.children]
-        out = kids[0]
-        for m in kids[1:]:
-            if isinstance(expr, Or):
-                out = [cmp.or_(bk, a, b) for a, b in zip(out, m)]
-            else:
-                out = [bk.mul(a, b) for a, b in zip(out, m)]
-        return out
+        if isinstance(expr, Or):
+            return ops.or_masks_seq(bk, kids)
+        return ops.and_masks_seq(bk, kids)
 
     # ------------------------------------------------------- aggregation
     def aggregate(self, table: EncryptedTable, agg, mask: list | None):
@@ -175,12 +171,12 @@ class Planner:
                 total = gmask if mask is None else None
                 m = gmask
             elif self.optimized:
-                m = [bk.mul(a, b) for a, b in zip(gmask, mask)]
+                m = ops.mul_lists(bk, gmask, mask)
             else:
                 col = table.col(group_col)
                 filtered = ops.mask_columns(bk, col.blocks, mask)
                 gm = [cmp.eq_scalar(bk, ct, int(v)) for ct in filtered]
-                m = [bk.mul(a, b) for a, b in zip(gm, mask)]
+                m = ops.mul_lists(bk, gm, mask)
             row = {}
             for agg in aggs:
                 row[agg.name] = self._agg_with_mask(table, agg, m)

@@ -18,4 +18,19 @@ Kernels:
   rotate_reduce  log-depth packed aggregation (the paper's rotate+add sum)
   flash_attn     blocked online-softmax attention for the LM substrate
                  (causal / local-window / logit-softcap variants)
+
+Batched evaluation path
+-----------------------
+The BFV core consumes the NTT and modops kernels through
+`core/limbops.LimbOps`, a dispatch layer that accepts (..., k, n)
+arrays — a whole column of ciphertext blocks at once — and flattens the
+batch into the kernels' (rows, n) grid, tiling the per-limb twiddle and
+modulus tables to match.  The `backend` flag on `BFVContext` /
+`BFVBackend(kernel_backend=...)` selects "pallas" vs the "ref" jnp
+oracles ("auto" picks Pallas on TPU); pass `interpret=True` (the default
+off-TPU) to run the kernels through the Pallas interpreter on CPU.  Both
+paths are exact and bit-identical, verified by tests/test_limbops_parity
+and tests/test_batched_equivalence.  `MockBackend(kernel_reduce=True)`
+likewise routes its `sum_slots` data movement through the rotate_reduce
+kernel while charging the looped schedule's op counts.
 """

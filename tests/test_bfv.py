@@ -2,6 +2,8 @@
 soundness (analytic bound must never exceed exact measured budget)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bfv import BFVContext

@@ -2,6 +2,7 @@
 real ciphertexts, plus hypothesis properties."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import compare as cmp

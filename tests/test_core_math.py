@@ -1,6 +1,7 @@
 """Number theory + NTT reference correctness (unit + hypothesis)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import mathutil as mu

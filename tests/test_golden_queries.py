@@ -1,0 +1,48 @@
+"""Golden regressions for engine/queries.py: Q1 and Q6 on MockBackend.
+
+These pin the two paper-anchored scan queries to their plaintext oracles
+with *exact* mod-t equality, and assert the optimized planner runs them
+with zero refresh (bootstrap) events — the paper's headline claim and
+the invariant the batched evaluation path must preserve.
+"""
+import pytest
+
+from repro.engine import queries as Q
+from repro.engine.planner import Planner
+
+
+@pytest.fixture(scope="module")
+def planner(tiny_db):
+    return Planner(tiny_db, optimized=True)
+
+
+@pytest.mark.parametrize("qn", ["Q1", "Q6"])
+def test_golden_query_exact_and_refresh_free(planner, tiny_db, mock_paper, qn):
+    _, run_f, oracle_f = Q.QUERIES[qn]
+    bk = mock_paper
+    bk.stats.reset()
+    bk.refresh_log.clear()
+    got = run_f(planner)
+    exp = oracle_f(tiny_db)
+    assert got == exp, f"{qn}: encrypted result != plaintext oracle (mod t)"
+    assert bk.stats.refresh == 0, (
+        f"{qn}: optimized plan paid {bk.stats.refresh} refreshes "
+        f"({bk.refresh_log})")
+
+
+def test_golden_q6_parameter_sweep(planner, tiny_db, mock_paper):
+    """Q6 with shifted predicate constants stays oracle-exact."""
+    bk = mock_paper
+    bk.stats.reset()
+    got = Q.run_q6(planner, year=1995, disc=(0.04, 0.06), qty=30)
+    exp = Q.oracle_q6(tiny_db, year=1995, disc=(0.04, 0.06), qty=30)
+    assert got == exp
+    assert bk.stats.refresh == 0
+
+
+def test_golden_q1_decrypt_counts(planner, tiny_db, mock_paper):
+    """Q1 group COUNTs across the full group grid reconcile with the
+    table's row count (every row lands in exactly one group)."""
+    got = Q.run_q1(planner)
+    sel = tiny_db.plain["lineitem"]["l_shipdate"] <= Q.D("1998-09-02")
+    assert sum(row["count_order"] for row in got.values()) == int(sel.sum())

@@ -2,6 +2,7 @@
 mode + uint32 modular arithmetic properties (hypothesis)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 import jax

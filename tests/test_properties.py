@@ -6,6 +6,7 @@ rather than fixed fixtures.
 """
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import compare as cmp

@@ -4,6 +4,7 @@ import os
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -31,6 +31,7 @@ def test_adamw_weight_decay_shrinks():
 
 @pytest.mark.slow
 def test_loss_decreases_on_structured_stream():
+    pytest.importorskip("repro.dist.sharding")  # launch.train depends on it
     from repro.launch.train import main
     losses = main(["--arch", "starcoder2-3b", "--smoke", "--steps", "80",
                    "--batch", "8", "--seq", "32", "--lr", "3e-3",
@@ -44,6 +45,7 @@ def test_loss_decreases_on_structured_stream():
 def test_checkpoint_resume_continuity(tmp_path):
     """Train 20 steps, checkpoint, resume for 10 more: the resumed loss
     sequence must equal an uninterrupted 30-step run's tail."""
+    pytest.importorskip("repro.dist.sharding")  # launch.train depends on it
     from repro.launch.train import main
     args = ["--arch", "qwen2-72b", "--smoke", "--batch", "4", "--seq", "16",
             "--lr", "1e-3", "--log-every", "100"]
