@@ -16,19 +16,21 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma-separated module names")
     args = ap.parse_args()
 
-    from . import (depth_model, packing_scaling, primitive_ops, q6_breakdown,
-                   roofline, storage, tpch_queries)
+    from . import (depth_model, mask_fusion, packing_scaling, primitive_ops,
+                   q6_breakdown, roofline, storage, tpch_queries)
     mods = {
         "depth_model": depth_model,
         "primitive_ops": primitive_ops,
         "storage": storage,
         "q6_breakdown": q6_breakdown,
         "packing_scaling": packing_scaling,
+        "mask_fusion": mask_fusion,
         "tpch_queries": tpch_queries,
         "roofline": roofline,
     }
     if args.only:
         mods = {k: v for k, v in mods.items() if k in args.only.split(",")}
+    failed = []
     for name, mod in mods.items():
         t0 = time.time()
         print(f"\n######## {name} ########", flush=True)
@@ -37,7 +39,10 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             print(f"[{name}] FAILED")
+            failed.append(name)
         print(f"[{name}] {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        raise SystemExit(f"benchmark modules failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -62,6 +62,8 @@ class OpStats:
     decrypt: int = 0
     refresh: int = 0        # noise-budget exhaustion events ("bootstraps")
     max_depth: int = 0      # deepest multiplicative chain observed
+    launches: int = 0       # primitive *calls* (a batched op over N blocks
+                            # is 1 launch but charges N to the op counters)
 
     def clone(self) -> "OpStats":
         return dataclasses.replace(self)
@@ -104,6 +106,7 @@ class _BackendBase:
         raise NotImplementedError
 
     def _count(self, *cts) -> int:
+        self.stats.launches += 1
         return max(self._nblocks(c) for c in cts)
 
     def _budget(self, noise: float) -> float:
@@ -209,6 +212,7 @@ class BFVBackend(_BackendBase):
         """Cross-block sum of a batch (the inter-block half of SUM/COUNT).
         Charges the same nblocks-1 adds as the sequential fold."""
         self.stats.add += max(batch.nblocks - 1, 0)
+        self.stats.launches += 1
         return self._set_d(self.ctx.fold_add(batch), self._d(batch))
 
     # -- io ----------------------------------------------------------------
@@ -368,6 +372,7 @@ class MockBackend(_BackendBase):
     def fold_blocks(self, batch: MockCipher) -> MockCipher:
         nb = self._nblocks(batch)
         self.stats.add += max(nb - 1, 0)
+        self.stats.launches += 1
         noise = batch.noise
         for _ in range(nb - 1):
             noise = self.model.add(noise, batch.noise)
@@ -502,6 +507,7 @@ class MockBackend(_BackendBase):
         nb = self._nblocks(a)
         self.stats.add += steps * nb
         self.stats.rotate += steps * nb
+        self.stats.launches += 1
         noise = a.noise
         for _ in range(steps):
             noise = self.model.add(noise, self.model.rotate(noise))

@@ -1,0 +1,305 @@
+"""Compiled-DAG query execution (DESIGN.md §7).
+
+`run_via_plan(planner, plan)` executes a declarative `QueryPlan` end to
+end: the logical WHERE/aux/group structure is lowered through
+engine/physical.py into atom + combine + translate + aggregate stages,
+the scheduler fuses distinct comparison circuits into cross-column
+batched launches (optimized regime), reuses mask subgraphs through the
+planner's CSE cache, and places planned refreshes for translated masks
+with the §4.3.2 i* rule.  The same plan runs in both regimes:
+
+  optimized    R1 atom isolation + fused circuit launches + R2 balanced
+               combine trees + R3 late injection at the aggregate.
+  unoptimized  the classical pipeline: sequential mask chains, joins
+               over already-filtered FK columns, group EQs on masked
+               columns — the Fig. 3(a) baseline, unfused.
+
+Every execution produces an `ExecReport` (the recorded op history) that
+is checked against the planner's `PlanReport`: measured multiplicative
+depth must stay within a small constant of the Table-3 prediction, and
+refresh events may only occur when the model predicted bootstraps.  The
+legacy `run_qN` bodies in engine/queries.py are kept verbatim as parity
+oracles — `run_via_plan` must reproduce their decrypted output exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from . import ops
+from .physical import (CmpAtom, annotate_downstream, compile_mask,
+                       run_mask_node)
+from .plan import And, Pred, QueryPlan
+
+# Tolerances between the Table-3 depth model and the executed history:
+# the model counts only ct-ct multiplies, while measured depth includes
+# plaintext-multiply steps (validity, broadcasts) and BSGS slack.
+DEPTH_SLACK_OVER = 3      # measured may exceed predicted by at most this
+DEPTH_SLACK_UNDER = 7     # optimized predictions may overshoot by this
+
+
+@dataclasses.dataclass
+class ExecReport:
+    """Recorded op history of one compiled-DAG execution."""
+
+    name: str
+    optimized: bool
+    predicted_depth: int
+    predicted_refreshes: int
+    budget_levels: int
+    measured_depth: int = 0
+    refreshes: int = 0
+    launches: int = 0
+    muls: int = 0
+    history: list = dataclasses.field(default_factory=list)
+
+    def record(self, label: str, before, after) -> None:
+        self.history.append({
+            "stage": label,
+            "mul": after.mul - before.mul,
+            "add": after.add - before.add,
+            "rotate": after.rotate - before.rotate,
+            "launches": after.launches - before.launches,
+            "refresh": after.refresh - before.refresh,
+            "max_depth": after.max_depth,
+        })
+
+    def validate(self) -> None:
+        """Assert the §4.3 noise model against the executed history."""
+        assert self.measured_depth <= self.predicted_depth + DEPTH_SLACK_OVER, (
+            f"{self.name}: executed depth {self.measured_depth} exceeds "
+            f"predicted {self.predicted_depth} (+{DEPTH_SLACK_OVER})")
+        if self.optimized:
+            assert self.predicted_depth <= self.measured_depth + DEPTH_SLACK_UNDER, (
+                f"{self.name}: prediction {self.predicted_depth} overshoots "
+                f"measured {self.measured_depth} (+{DEPTH_SLACK_UNDER})")
+            if self.predicted_refreshes == 0:
+                assert self.refreshes == 0, (
+                    f"{self.name}: plan predicted refresh-free but executor "
+                    f"paid {self.refreshes} refreshes")
+        if self.refreshes > 0:
+            assert self.predicted_refreshes > 0, (
+                f"{self.name}: {self.refreshes} refreshes but the model "
+                f"predicted none")
+
+
+class Executor:
+    """Runs one lowered QueryPlan against the planner's backend."""
+
+    def __init__(self, planner):
+        self.pl = planner
+        self.bk = planner.bk
+        self.db = planner.db
+        self.report: ExecReport | None = None
+
+    # ------------------------------------------------------------ public
+    def run(self, plan: QueryPlan, validate: bool = True) -> dict:
+        if plan.correlated:
+            raise NotImplementedError(
+                f"{plan.name}: correlated subqueries are not lowered yet")
+        pl, bk = self.pl, self.bk
+        pr = pl.report(plan)
+        self.report = ExecReport(plan.name, pl.optimized, pr.predicted_depth,
+                                 pr.predicted_refreshes, pr.budget_levels)
+        start = bk.stats.clone()
+        prior_max = bk.stats.max_depth
+        bk.stats.max_depth = 0
+        try:
+            out = self._execute(plan)
+        finally:
+            end = bk.stats.clone()
+            self.report.measured_depth = bk.stats.max_depth
+            self.report.refreshes = end.refresh - start.refresh
+            self.report.launches = end.launches - start.launches
+            self.report.muls = end.mul - start.mul
+            bk.stats.max_depth = max(prior_max, bk.stats.max_depth)
+        if validate:
+            self.report.validate()
+        return out
+
+    # ------------------------------------------------------- compilation
+    def _split_group_in(self, where, group_cols):
+        """Group pushdown: an IN predicate on the (single) group column
+        defines the group domain and leaves the WHERE tree — the group
+        enumeration already restricts to exactly those values."""
+        group_values: dict[str, list] = {}
+        if len(group_cols) != 1 or where is None:
+            return where, group_values
+        col = group_cols[0]
+        is_group_in = lambda e: isinstance(e, Pred) and e.col == col and e.op == "in"
+        if is_group_in(where):
+            return None, {col: list(where.value)}
+        if isinstance(where, And):
+            hit = [c for c in where.children if is_group_in(c)]
+            if hit:
+                # Absorb exactly one IN into the group enumeration; any
+                # further predicates on the group column stay in WHERE.
+                kept = [c for c in where.children if c is not hit[0]]
+                group_values[col] = list(hit[0].value)
+                if not kept:
+                    where = None
+                elif len(kept) == 1:
+                    where = kept[0]
+                else:
+                    where = And(tuple(kept))
+        return where, group_values
+
+    def _group_items(self, fact, group_cols, group_values):
+        """Per group column: [(name, encoded id), ...] in output order.
+        Pushed-down values encode with predicate semantics (constants
+        absent from the data map to a no-match id -> empty group)."""
+        per_col = []
+        for col in group_cols:
+            spec = fact.schema.col(col)
+            if col in group_values:
+                per_col.append([(v, spec.encode_scalar(v))
+                                for v in group_values[col]])
+            elif spec.dictionary is not None:
+                per_col.append(sorted(spec.dictionary.items()))
+            else:
+                raise NotImplementedError(
+                    f"group_by {col}: no dictionary and no IN predicate to "
+                    f"enumerate the domain from")
+        return per_col
+
+    # --------------------------------------------------------- execution
+    def _execute(self, plan: QueryPlan) -> dict:
+        pl, bk, db = self.pl, self.bk, self.db
+        fact = db.tables[plan.fact]
+        stats = bk.stats
+        group_cols = ([c.strip() for c in plan.group_by.split(",")]
+                      if plan.group_by else [])
+        where_expr, group_values = self._split_group_in(plan.where, group_cols)
+        per_col_items = self._group_items(fact, group_cols, group_values)
+
+        where_node = (compile_mask(db, fact, where_expr)
+                      if where_expr is not None else None)
+        aux_nodes = {a.name: (a, compile_mask(db, db.tables[a.hop.parent], a.expr))
+                     for a in plan.aux_masks}
+        inject_layers = (2 if group_cols else 1) \
+            + max((a.mul_depth() for a in plan.aggs), default=0)
+        if where_node is not None:
+            annotate_downstream(where_node, inject_layers)
+        for _, node in aux_nodes.values():
+            annotate_downstream(node, 2)   # AND with base + R3 injection
+
+        if pl.optimized:
+            # Stage 1 — fused atom evaluation: every distinct comparison
+            # circuit in the query (WHERE + aux + group EQs) is requested
+            # up front and evaluated in one stacked launch per shape.
+            ev = pl.evaluator()
+            snap = stats.clone()
+            if where_node is not None:
+                ev.request_tree(where_node)
+            for _, node in aux_nodes.values():
+                ev.request_tree(node)
+            for col, items in zip(group_cols, per_col_items):
+                for _name, vid in items:
+                    ev.request(CmpAtom(fact.name, col, "eq", int(vid)))
+            ev.flush()
+            self.report.record("atoms[fused]", snap, stats.clone())
+
+            snap = stats.clone()
+            where = (run_mask_node(where_node, ev, pl)
+                     if where_node is not None else None)
+            self.report.record("where", snap, stats.clone())
+            aux = {}
+            for name, (a, node) in aux_nodes.items():
+                snap = stats.clone()
+                aux[name] = self._translate_aux(a, node, ev, None)
+                self.report.record(f"aux:{name}", snap, stats.clone())
+            gmasks = {
+                col: dict(pl.group_masks(fact, col, [vid for _n, vid in items]))
+                for col, items in zip(group_cols, per_col_items)
+            }
+        else:
+            # Classical pipeline: sequential chains, no fusion, joins over
+            # filtered FK columns, raw group EQs combined after the WHERE.
+            snap = stats.clone()
+            where = (pl.where_mask(fact, where_expr)
+                     if where_expr is not None else None)
+            self.report.record("where[seq]", snap, stats.clone())
+            aux = {}
+            for name, (a, node) in aux_nodes.items():
+                snap = stats.clone()
+                fk_ov = (ops.mask_columns(bk, fact.col(a.hop.fk).blocks, where)
+                         if where is not None else None)
+                aux[name] = self._translate_aux(a, node, None, fk_ov)
+                self.report.record(f"aux:{name}[pushdown]", snap, stats.clone())
+            gmasks = {
+                col: dict(ops.group_masks(bk, fact, col,
+                                          [vid for _n, vid in items]))
+                for col, items in zip(group_cols, per_col_items)
+            }
+
+        snap = stats.clone()
+        out = (self._grouped(plan, fact, per_col_items, gmasks, where, aux)
+               if group_cols else self._ungrouped(plan, fact, where))
+        self.report.record("aggregate", snap, stats.clone())
+        return out
+
+    def _translate_aux(self, a, node, ev, fk_override):
+        """Aux mask: parent-table subtree -> translated fact mask."""
+        pl, bk, db = self.pl, self.bk, self.db
+        if ev is not None:
+            parent_mask = run_mask_node(node, ev, pl)
+        else:
+            parent_mask = pl.where_mask(db.tables[a.hop.parent], a.expr)
+        assert len(parent_mask) == 1, "aux translate: single-block parent"
+        need = pl.translate_levels(node.downstream_muls)
+        return ops.translate_mask_down(bk, parent_mask[0], db.tables[a.hop.child],
+                                       a.hop.fk, db.tables[a.hop.parent].nrows,
+                                       fk_override=fk_override, need_levels=need)
+
+    # ------------------------------------------------------- aggregation
+    def _dec(self, ct):
+        return int(self.bk.decrypt(ct)[0])
+
+    def _dec_agg(self, agg, r):
+        if agg.kind == "avg":
+            return (self._dec(r[0]), self._dec(r[1]))
+        return self._dec(r)
+
+    def _ungrouped(self, plan, fact, where) -> dict:
+        pl = self.pl
+        return {agg.name: self._dec_agg(agg, pl.aggregate(fact, agg, where))
+                for agg in plan.aggs}
+
+    def _grouped(self, plan, fact, per_col_items, gmasks, where, aux) -> dict:
+        pl, bk = self.pl, self.bk
+        out = {}
+        for combo in itertools.product(*per_col_items):
+            key = combo[0][0] if len(combo) == 1 else tuple(n for n, _ in combo)
+            gm_lists = [gmasks[col][vid]
+                        for col, (_n, vid) in zip(gmasks, combo)]
+            legs = gm_lists + ([where] if where is not None else [])
+            if pl.optimized:
+                base = ops.and_masks(bk, legs) if len(legs) > 1 else legs[0]
+            else:
+                seq = ([where] + gm_lists) if where is not None else gm_lists
+                base = ops.and_masks_seq(bk, seq) if len(seq) > 1 else seq[0]
+            base = ops.apply_validity(bk, base, fact)
+            row, parts = {}, {}
+            for agg in plan.aggs:
+                if agg.partition is None:
+                    row[agg.name] = self._dec_agg(
+                        agg, pl._agg_with_mask(fact, agg, base))
+                    continue
+                if agg.partition not in parts:
+                    am = aux[agg.partition]
+                    parts[agg.partition] = (
+                        ops.and_masks(bk, [base, am]) if pl.optimized
+                        else ops.and_masks_seq(bk, [base, am]))
+                hit = parts[agg.partition]
+                m = ([bk.sub(b, h) for b, h in zip(base, hit)]
+                     if agg.negated else hit)      # complement = base - hit
+                row[agg.name] = self._dec_agg(
+                    agg, pl._agg_with_mask(fact, agg, m))
+            out[key] = row
+        return out
+
+
+def run_via_plan(planner, plan: QueryPlan, validate: bool = True) -> dict:
+    """Execute a QueryPlan through the compiled operator DAG.  Returns
+    the same decrypted result structure as the legacy `run_qN` body."""
+    return Executor(planner).run(plan, validate=validate)

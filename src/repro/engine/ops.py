@@ -12,6 +12,11 @@ single pass evaluates every block through one jitted call per primitive
 and the planner's noise/depth model are identical to the per-block loop;
 singleton columns skip the batch layer entirely.
 
+Cross-mask batching extends this across *columns*: distinct comparison
+circuits of one query fuse into a single stacked launch per circuit
+shape (engine/physical.py), and the per-key join EQs of
+translate/fk_masks fuse the same way (`_per_key_eq`).
+
 Masks are lists of blocks of encrypted {0,1}; aggregates are single
 ciphertexts with the result replicated in every slot (the paper's
 fixed-size output leakage).
@@ -256,7 +261,7 @@ def group_masks(bk, table: EncryptedTable, col: str, domain: list[int]) -> list[
 
 
 def sort_column(bk, table: EncryptedTable, col: str, domain: list[int],
-                descending: bool = False):
+                descending: bool = False, mask_provider=None):
     """Homomorphic ORDER BY (§4.2.3): reconstruct the column as an
     encrypted *sorted sequence*, scanning the domain in order.
 
@@ -269,7 +274,11 @@ def sort_column(bk, table: EncryptedTable, col: str, domain: list[int],
 
     Cost: |D| x (1 EQ + aggregation + 2 comparisons) — Table 2's
     O(|D| * n/S) scan behaviour.  Single-block columns only (the paper's
-    32K-row setting)."""
+    32K-row setting).
+
+    mask_provider, if given, maps a domain value to its EQ mask block
+    list — the planner passes its memoized/fused per-value EQ cache so a
+    sort after a GROUP BY on the same column re-evaluates nothing."""
     assert table.nblocks == 1, "sort_column: single-block reconstruction"
     S = bk.slots
     idx = np.arange(S, dtype=np.int64)        # plaintext slot indices 0..S-1
@@ -277,7 +286,10 @@ def sort_column(bk, table: EncryptedTable, col: str, domain: list[int],
     prefix = None                             # encrypted running count
     out = None
     for v in order:
-        mask = [cmp.eq_scalar(bk, ct, int(v)) for ct in table.col(col).blocks]
+        if mask_provider is not None:
+            mask = list(mask_provider(int(v)))
+        else:
+            mask = [cmp.eq_scalar(bk, ct, int(v)) for ct in table.col(col).blocks]
         mask = apply_validity(bk, mask, table)
         c_v = count(bk, mask)                 # count in every slot
         new_prefix = c_v if prefix is None else bk.add(prefix, c_v)
@@ -297,11 +309,30 @@ def sort_column(bk, table: EncryptedTable, col: str, domain: list[int],
     return out
 
 
+def _per_key_eq(bk, fact_blocks: list, nparent: int) -> list[list]:
+    """EQ(fk, j+1) for every dense parent key — all nparent circuits run
+    in ONE cross-mask batched launch (the per-key square chains share a
+    shape, so the scheduler stacks them like any other fused atoms).
+    op_log still charges one logical EQ per key; per-block OpStats and
+    noise are identical to the per-key loop."""
+    x, batched = _stacked(bk, fact_blocks)
+    nb = len(fact_blocks)
+    zs = []
+    for j in range(nparent):
+        z = bk.sub_scalar(x, j + 1)
+        zs.extend(bk.unstack_blocks(z) if batched else [z])
+    if len(zs) == 1:
+        flat = [cmp.eq_zero(bk, zs[0])]
+    else:
+        flat = bk.unstack_blocks(cmp.eq_zero(bk, bk.stack_blocks(zs)))
+        if hasattr(bk, "op_log"):
+            bk.op_log["eq"] += nparent - 1
+    return [flat[j * nb : (j + 1) * nb] for j in range(nparent)]
+
+
 def fk_masks(bk, table: EncryptedTable, fk: str, nparent: int) -> list[list]:
     """EQ masks for every dense parent key 1..nparent (JOIN step 2)."""
-    x, batched = _stacked(bk, table.col(fk).blocks)
-    return [_unstacked(bk, cmp.eq_scalar(bk, x, j + 1), batched)
-            for j in range(nparent)]
+    return _per_key_eq(bk, table.col(fk).blocks, nparent)
 
 
 def pack_scalars(bk, scalar_cts: list) -> object:
@@ -321,7 +352,8 @@ from .plan import eq_depth as _eqd
 
 
 def translate_mask_down(bk, parent_mask_block, fact_table: EncryptedTable,
-                        fk: str, nparent: int, fk_override: list | None = None) -> list:
+                        fk: str, nparent: int, fk_override: list | None = None,
+                        need_levels: int = 6) -> list:
     """Push a parent-row mask through an FK: child_mask[r] =
     parent_mask[key(r)].  Per parent key: Extract+Broadcast the mask bit,
     EQ the fk column, multiply, accumulate (Fig. 2 steps 1-3).
@@ -335,8 +367,13 @@ def translate_mask_down(bk, parent_mask_block, fact_table: EncryptedTable,
     (planned, not per-key: the i* model's pay-one-bootstrap branch).
 
     fk_override substitutes pre-masked fk blocks: the unoptimized pipeline
-    joins over already-filtered columns (Fig. 3(a)'s deep chains)."""
-    parent_mask_block = bk.ensure_levels(parent_mask_block, 6)
+    joins over already-filtered columns (Fig. 3(a)'s deep chains).
+
+    need_levels sizes the planned refresh: the compiled-DAG scheduler
+    passes 2 (translate internals) + the IR-counted downstream mask
+    products, clamped by the i* rule; the legacy default of 6 matches
+    the hand-written query bodies."""
+    parent_mask_block = bk.ensure_levels(parent_mask_block, need_levels)
     fact_blocks = fk_override if fk_override is not None else fact_table.col(fk).blocks
     return _translate_down(bk, parent_mask_block, fact_blocks, nparent)
 
@@ -351,12 +388,14 @@ def translate_values_down(bk, packed_values, fact_table: EncryptedTable,
 
 
 def _translate_down(bk, packed, fact_blocks: list, nparent: int) -> list:
-    """Shared FK scatter: sum_j EQ(fk, j+1) x broadcast(packed, j)."""
-    x, batched = _stacked(bk, fact_blocks)
+    """Shared FK scatter: sum_j EQ(fk, j+1) x broadcast(packed, j).
+    The nparent per-key EQ circuits run in one fused launch."""
+    batched = len(fact_blocks) > 1
+    per_key = _per_key_eq(bk, fact_blocks, nparent)
     out = None
     for j in range(nparent):
         pj = bk.broadcast_slot(packed, j)         # encrypted bit / value
-        e = cmp.eq_scalar(bk, x, j + 1)
+        e = bk.stack_blocks(per_key[j]) if batched else per_key[j][0]
         term = bk.mul(e, pj)
         out = term if out is None else bk.add(out, term)
     return _unstacked(bk, out, batched)

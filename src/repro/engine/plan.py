@@ -85,7 +85,38 @@ def child_depth(c, t: int, optimized: bool = True) -> int:
     return c.depth(t, optimized)
 
 
-MaskExpr = Any  # Pred | And | Or | Not
+MaskExpr = Any  # Pred | And | Or | Not | Translated (defined below)
+
+
+@dataclasses.dataclass(frozen=True)
+class Translated:
+    """A mask evaluated on `hop.parent` and pushed down to the child
+    table through the FK (Fig. 2 Extract+Broadcast+EQ).  This is the
+    *executable* form of a filtering join: Q19's per-branch part masks
+    are `Translated(JoinHop(part -> lineitem), <part predicate tree>)`
+    nodes sitting inside the fact table's WHERE tree.
+
+    Depth: the EQ on the fk column meets the broadcast parent bit
+    (parent depth + 1 plaintext multiply) in one ct-ct product — the
+    same recurrence as a JoinHop with a parent_filter."""
+
+    hop: "JoinHop"
+    expr: Any                     # MaskExpr over hop.parent's columns
+
+    def depth(self, t: int, optimized: bool = True) -> int:
+        return max(eq_depth(t), child_depth(self.expr, t, optimized) + 1) + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class AuxMask:
+    """A named auxiliary fact-table mask: `expr` evaluated over
+    `hop.parent`, translated down through `hop.fk`.  Aggregates can
+    partition on it (Q12's high/low priority line counts) without the
+    mask participating in the WHERE conjunction."""
+
+    name: str
+    hop: "JoinHop"
+    expr: Any                     # MaskExpr over hop.parent's columns
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +135,8 @@ class Agg:
     kind: str                     # sum | count | avg
     factors: tuple = ()           # product of Factors (empty for count)
     name: str = ""
+    partition: str | None = None  # AuxMask name this aggregate is CASEd on
+    negated: bool = False         # count the complement of the partition
 
     def mul_depth(self) -> int:
         """ct-ct multiplies needed to form the aggregate's expression."""
@@ -140,6 +173,7 @@ class QueryPlan:
     aggs: tuple = ()
     order_by: str | None = None
     correlated: bool = False      # Q4/Q17-style subquery (extra LT stage)
+    aux_masks: tuple = ()         # AuxMasks aggregates may partition on
 
     # ---- Table-3 depth model ------------------------------------------
     def mask_depth(self, t: int, optimized: bool) -> int:

@@ -23,6 +23,12 @@ on top of the mask and costs i extra mask multiplications:
 
     Cost(i) = (m-i)*C_mul + i*C_mul + [D_i > B] * C_boot
     i*      = max{ i : D_i <= B }   if feasible else m (pay one refresh)
+
+In the optimized regime, mask construction, group-by enumeration and
+ORDER BY all route through the physical IR (engine/physical.py): masks
+compile to CmpAtom DAG nodes that are CSE-deduplicated on the planner's
+`mask_cache` and fused into cross-column batched circuit launches; see
+engine/executor.py for whole-plan execution (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -31,7 +37,7 @@ import math
 
 from ..core import compare as cmp
 from . import ops
-from .plan import And, Not, Or, Pred, QueryPlan, child_depth, eq_depth
+from .plan import And, Not, Or, Pred, QueryPlan, Translated, child_depth, eq_depth
 from .storage import Database, EncryptedTable
 
 
@@ -75,6 +81,31 @@ class Planner:
         self.bk = db.bk
         self.optimized = optimized
         self.budget_levels = noise_budget_levels(self.bk)
+        # CSE cache shared by every compiled mask: CmpAtom.key -> blocks.
+        # WHERE predicates, group-by EQ enumerations, aux/join masks and
+        # sort passes all read and write the same subgraph store.
+        self.mask_cache: dict = {}
+        # Scheduler knobs (benchmarks flip these to measure the pre-DAG
+        # schedule): fuse_masks batches distinct circuits cross-column,
+        # share_masks enables the CSE cache.  Both default to the regime.
+        self.fuse_masks = optimized
+        self.share_masks = optimized
+
+    def evaluator(self):
+        """A physical-atom evaluator bound to this planner's CSE cache;
+        circuit fusion is enabled only in the optimized regime."""
+        from .physical import AtomEvaluator
+        return AtomEvaluator(self.db, self.bk,
+                             self.mask_cache if self.share_masks else {},
+                             fuse=self.fuse_masks)
+
+    def translate_levels(self, downstream_muls: int) -> int:
+        """Planned-refresh sizing for a mask about to cross an FK hop —
+        the i* rule on levels: the translated bit must absorb the hop
+        internals (broadcast + EQ x bit, ~2 levels) plus every downstream
+        mask product; if that exceeds the whole budget the infeasible
+        branch pays its single planned refresh inside ensure_levels."""
+        return min(2 + downstream_muls, self.budget_levels)
 
     # ------------------------------------------------------------- report
     def report(self, plan: QueryPlan) -> PlanReport:
@@ -86,21 +117,22 @@ class Planner:
 
     # ------------------------------------------------- mask construction
     def where_mask(self, table: EncryptedTable, expr) -> list:
-        """Evaluate a MaskExpr tree into one mask per block."""
-        if self.optimized:
-            return self._mask_opt(table, expr)
-        return self._mask_seq(table, expr)
+        """Evaluate a MaskExpr tree into one mask per block.
 
-    def _mask_opt(self, table, expr) -> list:
-        bk = self.bk
-        if isinstance(expr, Pred):
-            return ops.pred_mask(bk, table, expr)
-        if isinstance(expr, Not):
-            return ops.not_mask(bk, self._mask_opt(table, expr.child))
-        kids = [self._mask_opt(table, c) for c in expr.children]
-        if isinstance(expr, And):
-            return ops.and_masks(bk, kids)          # R2: balanced tree
-        return ops.or_masks(bk, kids)
+        Optimized regime: the tree is lowered through engine/physical.py
+        — R1 isolation becomes a set of CmpAtoms (CSE-deduplicated on the
+        planner cache), all atoms sharing a circuit shape run in one
+        fused cross-column launch, and the combine layers replay R2's
+        balanced trees.  Unoptimized keeps the sequential pipeline."""
+        if not self.optimized:
+            return self._mask_seq(table, expr)
+        from .physical import annotate_downstream, compile_mask, run_mask_node
+        node = compile_mask(self.db, table, expr)
+        annotate_downstream(node, 1)     # R3: one injection at the aggregate
+        ev = self.evaluator()
+        ev.request_tree(node)
+        ev.flush()
+        return run_mask_node(node, ev, self)
 
     def _mask_seq(self, table, expr) -> list:
         """Unoptimized: classical pipeline semantics.  Conjunctions chain
@@ -113,6 +145,13 @@ class Planner:
             return ops.pred_mask(bk, table, expr)
         if isinstance(expr, Not):
             return ops.not_mask(bk, self._mask_seq(table, expr.child))
+        if isinstance(expr, Translated):
+            parent = self.db.tables[expr.hop.parent]
+            pm = self._mask_seq(parent, expr.expr)
+            assert len(pm) == 1, "translated: single-block parent"
+            return ops.translate_mask_down(bk, pm[0],
+                                           self.db.tables[expr.hop.child],
+                                           expr.hop.fk, parent.nrows)
         kids = [self._mask_seq(table, c) for c in expr.children]
         if isinstance(expr, Or):
             return ops.or_masks_seq(bk, kids)
@@ -150,6 +189,28 @@ class Planner:
             return (ops.reduce_blocks(bk, vals), ops.count(bk, mask))
         return ops.reduce_blocks(bk, vals)
 
+    # ----------------------------------------------- group-by / order-by
+    def group_masks(self, table: EncryptedTable, col: str, domain) -> list:
+        """Per-value EQ masks for GROUP BY / ORDER BY enumeration.
+
+        Optimized: memoized on the planner's CSE cache and fused into a
+        single stacked launch for all uncached values — repeated group
+        pairs (Q1), sorts after grouping, and re-run queries all reuse
+        the identical `eq_scalar` subgraphs.  Unoptimized recomputes,
+        like the classical pipeline it models."""
+        if not self.optimized:
+            return ops.group_masks(self.bk, table, col, domain)
+        return self.evaluator().eq_masks(table, col, domain)
+
+    def sort_column(self, table: EncryptedTable, col: str, domain,
+                    descending: bool = False):
+        """§4.2.3 ORDER BY through the memoized EQ-mask store."""
+        if not self.optimized:
+            return ops.sort_column(self.bk, table, col, domain, descending)
+        masks = dict(self.group_masks(table, col, domain))
+        return ops.sort_column(self.bk, table, col, domain, descending,
+                               mask_provider=lambda v: masks[v])
+
     # ------------------------------------------------------------- joins
     def semi_join_mask(self, hop, parent_mask_block) -> list:
         """Translate a parent-row mask to the child through hop.fk."""
@@ -166,7 +227,7 @@ class Planner:
         results = {}
         if mask is not None:
             mask = ops.apply_validity(bk, mask, table)
-        for v, gmask in ops.group_masks(bk, table, group_col, domain):
+        for v, gmask in self.group_masks(table, group_col, domain):
             if mask is None:
                 total = gmask if mask is None else None
                 m = gmask

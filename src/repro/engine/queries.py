@@ -3,10 +3,18 @@
 and complex predicates.
 
 Each query has:
-  plan_qN()            declarative QueryPlan (drives the depth model)
-  run_qN(planner, ...) encrypted execution composed from engine.ops
+  plan_qN()            declarative QueryPlan (drives the depth model and,
+                       for the ported queries, compiled-DAG execution)
+  run_qN(planner, ...) encrypted execution composed from engine.ops —
+                       kept verbatim as the parity oracle for the
+                       compiled path
   oracle_qN(db, ...)   plaintext reference (numpy over the client shadow
                        copies) returning the same mod-t values
+
+Q1, Q6, Q12 and Q19 additionally execute through the physical operator
+DAG: `run_via_plan(planner, plan_qN())` (engine/executor.py) lowers the
+plan, fuses comparison circuits across columns, reuses mask subgraphs
+via CSE, and must decrypt to exactly the same result as `run_qN`.
 
 Aggregate results follow the paper's conventions: AVG is returned as a
 (SUM, COUNT) pair; fixed-point scales multiply through products and the
@@ -19,7 +27,9 @@ import numpy as np
 
 from ..core import compare as cmp
 from . import ops
-from .plan import Agg, And, Factor, JoinHop, Or, Pred, QueryPlan
+from .executor import run_via_plan  # noqa: F401  (re-exported: the DAG path)
+from .plan import (Agg, And, AuxMask, Factor, JoinHop, Or, Pred, QueryPlan,
+                   Translated)
 from .planner import Planner
 from .schema import date_to_int
 from .storage import Database
@@ -222,6 +232,7 @@ def oracle_q4(db: Database, d0: str = "1993-07-01", d1: str = "1993-10-01") -> d
 # ===========================================================================
 
 def plan_q12() -> QueryPlan:
+    hop = JoinHop("orders", "l_orderkey", "lineitem")
     return QueryPlan(
         name="Q12", fact="lineitem",
         where=And((Pred("l_shipmode", "in", ["MAIL", "SHIP"]),
@@ -229,10 +240,17 @@ def plan_q12() -> QueryPlan:
                    Pred("l_shipdate", "<", rhs_col="l_commitdate"),
                    Pred("l_receiptdate", ">=", D("1994-01-01")),
                    Pred("l_receiptdate", "<", D("1995-01-01")))),
-        hops=(JoinHop("orders", "l_orderkey", "lineitem"),),
+        hops=(hop,),
         group_by="l_shipmode", group_domain=2,
-        aggs=(Agg("count", (), "high_line_count"),
-              Agg("count", (), "low_line_count")))
+        # CASE aggregation: both counts partition on the translated
+        # high-priority mask (the IN on l_shipmode doubles as the group
+        # domain — the executor's group-pushdown rule).
+        aggs=(Agg("count", (), "high_line_count", partition="high"),
+              Agg("count", (), "low_line_count", partition="high",
+                  negated=True)),
+        aux_masks=(AuxMask("high", hop,
+                           Pred("o_orderpriority", "in",
+                                ["1-URGENT", "2-HIGH"])),))
 
 
 def run_q12(pl: Planner, modes=("MAIL", "SHIP"), year: int = 1994) -> dict:
@@ -357,16 +375,23 @@ _Q19_BRANCHES = (
 
 
 def plan_q19() -> QueryPlan:
-    branch = And((Pred("p_brand", "=", "Brand#12"),
-                  Pred("p_container", "in", []),
-                  Pred("l_quantity", "between", (1, 11)),
-                  Pred("p_size", "between", (1, 5)),
-                  Pred("l_shipmode", "in", ["AIR", "REG AIR"]),
-                  Pred("l_shipinstruct", "=", "DELIVER IN PERSON")))
+    """The full three-branch disjunction as an executable IR tree: each
+    branch's part-side conjunction sits under a Translated node (the
+    l_partkey hop), ANDed with its lineitem quantity window; the common
+    lineitem predicates join the disjunction at the top."""
+    hop = JoinHop("part", "l_partkey", "lineitem")
+    branches = []
+    for br in _Q19_BRANCHES:
+        part_expr = And((Pred("p_brand", "=", br["brand"]),
+                         Pred("p_container", "in", br["containers"]),
+                         Pred("p_size", "between", br["size"])))
+        branches.append(And((Translated(hop, part_expr),
+                             Pred("l_quantity", "between", br["qty"]))))
     return QueryPlan(
         name="Q19", fact="lineitem",
-        where=Or((branch, branch, branch)),
-        hops=(JoinHop("part", "l_partkey", "lineitem"),),
+        where=And((Or(tuple(branches)),
+                   Pred("l_shipmode", "in", ["AIR", "REG AIR"]),
+                   Pred("l_shipinstruct", "=", "DELIVER IN PERSON"))),
         aggs=(Agg("sum", (Factor("l_extendedprice"), Factor("l_discount", -1, 100)),
                   "revenue"),))
 
@@ -685,6 +710,10 @@ def oracle_q17(db: Database, brand: str = "Brand#23", container: str = "MED BOX"
     m = small & li_pm
     return {"avg_yearly_x7": int(li["l_extendedprice"][m].sum()) % t}
 
+
+# Queries whose plans lower fully to the physical operator DAG:
+# run_via_plan(planner, plan_qN()) must equal run_qN(planner) exactly.
+PLAN_EXECUTABLE = ("Q1", "Q6", "Q12", "Q19")
 
 QUERIES = {
     "Q1": (plan_q1, run_q1, oracle_q1),

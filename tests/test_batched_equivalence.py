@@ -181,7 +181,17 @@ def test_engine_ops_batched_multiblock_table():
     # tracks the max, so the batched bound is conservative (never lower).
     assert total.noise >= total_l.noise - 1e-9
     assert total.noise <= total_l.noise + 4.0
-    assert dataclasses.asdict(stats_b) == dataclasses.asdict(stats_l)
+    # launches differ by design (batching = fewer primitive calls for the
+    # same charged work); every charged counter must match exactly.
+    assert _charged(stats_b) == _charged(stats_l)
+    assert stats_b.launches < stats_l.launches
+
+
+def _charged(stats):
+    """OpStats minus the schedule-dependent launch counter."""
+    d = dataclasses.asdict(stats)
+    d.pop("launches")
+    return d
 
 
 def test_mock_kernel_reduce_matches_looped():
@@ -197,7 +207,7 @@ def test_mock_kernel_reduce_matches_looped():
     s_k = bk_kern.sum_slots(x_k)
     assert np.array_equal(s_l.vec, s_k.vec)
     assert s_l.noise == pytest.approx(s_k.noise)
-    assert dataclasses.asdict(bk_loop.stats) == dataclasses.asdict(bk_kern.stats)
+    assert _charged(bk_loop.stats) == _charged(bk_kern.stats)
     # batched form
     cols_l = bk_loop.stack_blocks([bk_loop.encrypt(np.full(256, i)) for i in (1, 2, 3)])
     cols_k = bk_kern.stack_blocks([bk_kern.encrypt(np.full(256, i)) for i in (1, 2, 3)])
