@@ -17,7 +17,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (depth_model, mask_fusion, packing_scaling, primitive_ops,
-                   q6_breakdown, roofline, storage, tpch_queries)
+                   q6_breakdown, roofline, storage, tpch_queries,
+                   workload_cache)
     mods = {
         "depth_model": depth_model,
         "primitive_ops": primitive_ops,
@@ -25,6 +26,7 @@ def main() -> None:
         "q6_breakdown": q6_breakdown,
         "packing_scaling": packing_scaling,
         "mask_fusion": mask_fusion,
+        "workload_cache": workload_cache,
         "tpch_queries": tpch_queries,
         "roofline": roofline,
     }

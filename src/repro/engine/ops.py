@@ -330,8 +330,20 @@ def _per_key_eq(bk, fact_blocks: list, nparent: int) -> list[list]:
     return [flat[j * nb : (j + 1) * nb] for j in range(nparent)]
 
 
-def fk_masks(bk, table: EncryptedTable, fk: str, nparent: int) -> list[list]:
-    """EQ masks for every dense parent key 1..nparent (JOIN step 2)."""
+def fk_masks(bk, table: EncryptedTable, fk: str, nparent: int,
+             eq_cache=None) -> list[list]:
+    """EQ masks for every dense parent key 1..nparent (JOIN step 2).
+
+    With an `eq_cache` (a WorkloadCache), the whole per-key bank is
+    memoized on (child table, fk, nparent): repeated FK translations —
+    several hops over one fk within a query, or the same join across a
+    workload's queries — stop re-running nparent EQ circuits."""
+    if eq_cache is not None:
+        bank = eq_cache.fk_lookup(bk, table.name, fk, nparent)
+        if bank is None:
+            bank = _per_key_eq(bk, table.col(fk).blocks, nparent)
+            eq_cache.fk_store(bk, table.name, fk, nparent, bank)
+        return bank
     return _per_key_eq(bk, table.col(fk).blocks, nparent)
 
 
@@ -353,7 +365,7 @@ from .plan import eq_depth as _eqd
 
 def translate_mask_down(bk, parent_mask_block, fact_table: EncryptedTable,
                         fk: str, nparent: int, fk_override: list | None = None,
-                        need_levels: int = 6) -> list:
+                        need_levels: int = 6, eq_cache=None) -> list:
     """Push a parent-row mask through an FK: child_mask[r] =
     parent_mask[key(r)].  Per parent key: Extract+Broadcast the mask bit,
     EQ the fk column, multiply, accumulate (Fig. 2 steps 1-3).
@@ -372,10 +384,18 @@ def translate_mask_down(bk, parent_mask_block, fact_table: EncryptedTable,
     need_levels sizes the planned refresh: the compiled-DAG scheduler
     passes 2 (translate internals) + the IR-counted downstream mask
     products, clamped by the i* rule; the legacy default of 6 matches
-    the hand-written query bodies."""
+    the hand-written query bodies.
+
+    eq_cache memoizes the per-key EQ bank (see fk_masks); it is skipped
+    under fk_override — pre-masked fk columns are data-dependent and
+    must not be shared."""
     parent_mask_block = bk.ensure_levels(parent_mask_block, need_levels)
-    fact_blocks = fk_override if fk_override is not None else fact_table.col(fk).blocks
-    return _translate_down(bk, parent_mask_block, fact_blocks, nparent)
+    if fk_override is not None:
+        return _translate_down(bk, parent_mask_block, fk_override, nparent)
+    fact_blocks = fact_table.col(fk).blocks
+    per_key = (fk_masks(bk, fact_table, fk, nparent, eq_cache)
+               if eq_cache is not None else None)
+    return _translate_down(bk, parent_mask_block, fact_blocks, nparent, per_key)
 
 
 def translate_values_down(bk, packed_values, fact_table: EncryptedTable,
@@ -387,11 +407,14 @@ def translate_values_down(bk, packed_values, fact_table: EncryptedTable,
     return _translate_down(bk, packed_values, fact_table.col(fk).blocks, nparent)
 
 
-def _translate_down(bk, packed, fact_blocks: list, nparent: int) -> list:
+def _translate_down(bk, packed, fact_blocks: list, nparent: int,
+                    per_key: list | None = None) -> list:
     """Shared FK scatter: sum_j EQ(fk, j+1) x broadcast(packed, j).
-    The nparent per-key EQ circuits run in one fused launch."""
+    The nparent per-key EQ circuits run in one fused launch (or arrive
+    pre-evaluated from the workload cache's fk bank)."""
     batched = len(fact_blocks) > 1
-    per_key = _per_key_eq(bk, fact_blocks, nparent)
+    if per_key is None:
+        per_key = _per_key_eq(bk, fact_blocks, nparent)
     out = None
     for j in range(nparent):
         pj = bk.broadcast_slot(packed, j)         # encrypted bit / value

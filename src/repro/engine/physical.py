@@ -18,10 +18,13 @@ single ciphertext is touched:
 
 Two scheduler optimizations act on the atom set:
 
-  CSE          atoms are keyed on (table, column, circuit, shift); a
-               cache shared across the whole planner means `l_returnflag
-               = 'A'` is evaluated once no matter how many group pairs,
-               sort passes or repeated queries mention it.
+  CSE          atoms are keyed on (table, column, circuit, shift); the
+               planner-wide WorkloadCache (engine/workload.py) means
+               `l_returnflag = 'A'` is evaluated once no matter how many
+               group pairs, sort passes or repeated queries mention it —
+               and every hit passes noise-aware admission, so cached
+               masks are refreshed or re-derived (never served blind)
+               when a deeper consumer needs more remaining levels.
   Fusion       all *distinct* atoms that share a circuit shape — every
                EQ in the query, every LT in the query — are stacked
                across columns (and tables) into one `(nblocks_total, ...)`
@@ -143,6 +146,22 @@ class MaskNode:
             out.extend(c.atoms())
         return out
 
+    def atom_needs(self) -> list:
+        """(atom, need_levels) pairs for the whole subtree: how many ct-ct
+        multiplications each atom's mask must absorb downstream — the
+        node's annotated products plus the predicate's own combiner
+        (BETWEEN multiplies its legs before leaving the predicate).
+        Drives noise-aware WorkloadCache admission."""
+        out = []
+        if self.pred is not None:
+            extra = (len(self.pred.atoms) - 1
+                     if self.pred.combine == "mul" else 0)
+            for a in self.pred.atoms:
+                out.append((a, self.downstream_muls + extra))
+        for c in self.children:
+            out.extend(c.atom_needs())
+        return out
+
 
 def compile_mask(db, table: EncryptedTable, expr) -> MaskNode:
     """Recursively lower a MaskExpr over `table` into a MaskNode tree."""
@@ -182,26 +201,42 @@ def annotate_downstream(node: MaskNode, above: int) -> None:
 # Fused atom evaluation (CSE + cross-column batching).
 # ---------------------------------------------------------------------------
 
+# Default admission requirement when a consumer's downstream product
+# count is unknown: one combine layer + the R3 injection.
+DEFAULT_NEED_LEVELS = 2
+
+
 class AtomEvaluator:
     """Evaluates CmpAtoms against a backend with CSE and circuit fusion.
 
-    `cache` maps atom.key -> mask block list and is shared planner-wide,
-    so group-by EQ masks, sort passes and repeated predicates all hit it.
+    `cache` is a WorkloadCache (engine/workload.py) mapping atom.key ->
+    mask block entries; shared planner-wide (and, for workload batches,
+    across planners), so group-by EQ masks, sort passes, repeated
+    predicates and repeated *queries* all hit it.  Every lookup goes
+    through the cache's noise-aware admission: the consumer's
+    `need_levels` (downstream ct-ct products) is compared against the
+    entry's remaining noise budget, so a mask cached by a shallow plan is
+    refreshed (charged + counted) or re-derived before a deeper plan may
+    consume it — never served blind.
     `fuse=True` stacks every pending atom of one circuit kind into a
     single batched call (cross-mask batching); `fuse=False` evaluates
     atom-at-a-time (each still column-batched over its own blocks).
     """
 
-    def __init__(self, db, bk, cache: dict | None = None, fuse: bool = True):
+    def __init__(self, db, bk, cache=None, fuse: bool = True):
+        from .workload import WorkloadCache
         self.db = db
         self.bk = bk
-        self.cache = cache if cache is not None else {}
+        # No shared cache (share_masks off): a private throwaway store —
+        # CSE within this evaluator only, nothing outlives it.
+        self.cache = cache if cache is not None else WorkloadCache()
         self.fuse = fuse
         self._pending: dict[str, list] = {"eq": [], "lt": []}
 
     # ------------------------------------------------------------- intake
-    def request(self, atom: CmpAtom) -> None:
-        if atom.key in self.cache:
+    def request(self, atom: CmpAtom,
+                need_levels: int = DEFAULT_NEED_LEVELS) -> None:
+        if self.cache.usable(self.bk, atom, need_levels):
             return
         pend = self._pending[atom.circuit]
         # Unfused mode models the pre-DAG schedule: no sharing at all,
@@ -210,8 +245,8 @@ class AtomEvaluator:
             pend.append(atom)
 
     def request_tree(self, node: MaskNode) -> None:
-        for atom in node.atoms():
-            self.request(atom)
+        for atom, need in node.atom_needs():
+            self.request(atom, need)
 
     # --------------------------------------------------------------- eval
     def _z_blocks(self, atom: CmpAtom) -> list:
@@ -248,7 +283,7 @@ class AtomEvaluator:
                     x = bk.stack_blocks(zs) if len(zs) > 1 else zs[0]
                     out = self._circuit(kind, x)
                     outs = bk.unstack_blocks(out) if len(zs) > 1 else [out]
-                    self.cache[atom.key] = outs
+                    self.cache.insert(bk, atom, outs)
                 self._pending[kind] = []
                 continue
             per_atom = [(atom, self._z_blocks(atom)) for atom in atoms]
@@ -262,25 +297,34 @@ class AtomEvaluator:
                 bk.op_log["eq" if kind == "eq" else "cmp"] += len(atoms) - 1
             i = 0
             for atom, zs in per_atom:
-                self.cache[atom.key] = out_blocks[i : i + len(zs)]
+                self.cache.insert(bk, atom, out_blocks[i : i + len(zs)])
                 i += len(zs)
             self._pending[kind] = []
 
-    def get(self, atom: CmpAtom) -> list:
-        if atom.key not in self.cache:
-            self.request(atom)
+    def get(self, atom: CmpAtom,
+            need_levels: int = DEFAULT_NEED_LEVELS) -> list:
+        """Fetch an atom's mask through noise-aware admission: a cached
+        entry is served only if its blocks can still absorb `need_levels`
+        products (or as much as a fresh derivation could); otherwise the
+        cache refreshes it at admission or drops it for re-derivation."""
+        blocks = self.cache.serve(self.bk, atom, need_levels)
+        if blocks is None:
+            self.request(atom, need_levels)
             self.flush()
-        return self.cache[atom.key]
+            blocks = self.cache.serve(self.bk, atom, need_levels)
+        return blocks
 
     # ------------------------------------------------- group-by EQ masks
-    def eq_masks(self, table: EncryptedTable, col: str, values) -> list:
+    def eq_masks(self, table: EncryptedTable, col: str, values,
+                 need_levels: int = DEFAULT_NEED_LEVELS) -> list:
         """Memoized per-value EQ masks (GROUP BY / ORDER BY dictionary
         enumeration), fused into one launch per flush."""
         atoms = [CmpAtom(table.name, col, "eq", int(v)) for v in values]
         for atom in atoms:
-            self.request(atom)
+            self.request(atom, need_levels)
         self.flush()
-        return [(int(v), self.cache[atom.key]) for v, atom in zip(values, atoms)]
+        return [(int(v), self.get(atom, need_levels))
+                for v, atom in zip(values, atoms)]
 
 
 # ---------------------------------------------------------------------------
@@ -294,7 +338,7 @@ def run_mask_node(node: MaskNode, ev: AtomEvaluator, planner) -> list:
     from . import ops
     bk = ev.bk
     if node.kind == "pred":
-        return _run_pred(node.pred, ev)
+        return _run_pred(node.pred, ev, node.downstream_muls)
     if node.kind == "not":
         return ops.not_mask(bk, run_mask_node(node.children[0], ev, planner))
     if node.kind == "translated":
@@ -304,7 +348,8 @@ def run_mask_node(node: MaskNode, ev: AtomEvaluator, planner) -> list:
         nparent = ev.db.tables[node.hop.parent].nrows
         need = planner.translate_levels(node.downstream_muls)
         return ops.translate_mask_down(bk, parent_mask[0], child, node.hop.fk,
-                                       nparent, need_levels=need)
+                                       nparent, need_levels=need,
+                                       eq_cache=ev.cache)
     kids = [run_mask_node(c, ev, planner) for c in node.children]
     # Noise-aware combine ordering: pair shallow masks first so the deep
     # legs (translated joins) enter the balanced tree as late as possible
@@ -315,16 +360,20 @@ def run_mask_node(node: MaskNode, ev: AtomEvaluator, planner) -> list:
     return ops.or_masks(bk, kids)
 
 
-def _run_pred(prog: PredProgram, ev: AtomEvaluator) -> list:
+def _run_pred(prog: PredProgram, ev: AtomEvaluator,
+              downstream_muls: int = DEFAULT_NEED_LEVELS) -> list:
     from . import ops
     bk = ev.bk
     if prog.combine == "zero":                      # empty IN set: all-zero
         blocks = ev.db.tables[prog.table].col(prog.col).blocks
         x, batched = ops._stacked(bk, blocks)
         return ops._unstacked(bk, bk.mul_scalar(x, 0), batched)
+    # BETWEEN's legs absorb the in-predicate products on top of the
+    # tree-level downstream count (mirrors MaskNode.atom_needs).
+    need = downstream_muls + (len(prog.atoms) - 1 if prog.combine == "mul" else 0)
     parts = []
     for atom, neg in zip(prog.atoms, prog.negs):
-        m = ev.get(atom)
+        m = ev.get(atom, need)
         parts.append(ops.not_mask(bk, m) if neg else m)
     if prog.combine == "one":
         return parts[0]

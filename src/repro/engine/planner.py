@@ -76,15 +76,19 @@ class PlanReport:
 
 
 class Planner:
-    def __init__(self, db: Database, optimized: bool = True):
+    def __init__(self, db: Database, optimized: bool = True, cache=None):
+        from .workload import WorkloadCache
         self.db = db
         self.bk = db.bk
         self.optimized = optimized
         self.budget_levels = noise_budget_levels(self.bk)
-        # CSE cache shared by every compiled mask: CmpAtom.key -> blocks.
-        # WHERE predicates, group-by EQ enumerations, aux/join masks and
-        # sort passes all read and write the same subgraph store.
-        self.mask_cache: dict = {}
+        # Noise-aware mask store shared by every compiled mask: WHERE
+        # predicates, group-by EQ enumerations, aux/join masks and sort
+        # passes all read and write the same subgraph store through
+        # noise-checked admission.  Pass an external WorkloadCache to
+        # persist masks across planners/queries (engine/workload.py).
+        self.mask_cache = cache if cache is not None else WorkloadCache()
+        self.mask_cache.bind(db)       # invalidate on table re-loads
         # Scheduler knobs (benchmarks flip these to measure the pre-DAG
         # schedule): fuse_masks batches distinct circuits cross-column,
         # share_masks enables the CSE cache.  Both default to the regime.
@@ -92,11 +96,12 @@ class Planner:
         self.share_masks = optimized
 
     def evaluator(self):
-        """A physical-atom evaluator bound to this planner's CSE cache;
-        circuit fusion is enabled only in the optimized regime."""
+        """A physical-atom evaluator bound to this planner's mask cache;
+        circuit fusion is enabled only in the optimized regime.  With
+        sharing disabled the evaluator gets a private throwaway store."""
         from .physical import AtomEvaluator
         return AtomEvaluator(self.db, self.bk,
-                             self.mask_cache if self.share_masks else {},
+                             self.mask_cache if self.share_masks else None,
                              fuse=self.fuse_masks)
 
     def translate_levels(self, downstream_muls: int) -> int:
@@ -229,7 +234,6 @@ class Planner:
             mask = ops.apply_validity(bk, mask, table)
         for v, gmask in self.group_masks(table, group_col, domain):
             if mask is None:
-                total = gmask if mask is None else None
                 m = gmask
             elif self.optimized:
                 m = ops.mul_lists(bk, gmask, mask)

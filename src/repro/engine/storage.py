@@ -68,6 +68,14 @@ class Database:
         self.bk = backend
         self.tables: dict[str, EncryptedTable] = {}
         self.plain: dict[str, dict[str, np.ndarray]] = {}
+        # Invalidation subscribers: called with the table name whenever a
+        # table is (re)loaded — derived artifacts (cached masks) must not
+        # outlive the ciphertexts they were computed from.
+        self._reload_hooks: list = []
+
+    def add_reload_hook(self, fn) -> None:
+        if fn not in self._reload_hooks:
+            self._reload_hooks.append(fn)
 
     def load_table(self, schema: TableSchema, data: dict[str, Any], nrows: int) -> EncryptedTable:
         bk = self.bk
@@ -87,6 +95,8 @@ class Database:
         tbl = EncryptedTable(schema.name, schema, cols, nrows, S)
         self.tables[schema.name] = tbl
         self.plain[schema.name] = shadow
+        for fn in self._reload_hooks:
+            fn(schema.name)
         return tbl
 
     def storage_bytes(self) -> int:

@@ -73,6 +73,7 @@ def test_exact_partial_sums(tiny_db, mock_paper):
     assert exact == int(tiny_db.plain["lineitem"]["l_quantity"].sum())
 
 
+@pytest.mark.slow
 def test_order_by_sorted_reconstruction(tiny_db, mock_paper):
     """§4.2.3 ORDER BY: the engine reconstructs an encrypted *sorted*
     sequence by domain enumeration + prefix placement."""

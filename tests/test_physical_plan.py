@@ -120,6 +120,7 @@ def test_cse_cache_reused_across_runs(tiny_db, mock_paper):
     assert atoms_stage["mul"] == 0, "cached atoms must not re-run circuits"
 
 
+@pytest.mark.slow
 def test_group_mask_memoization_feeds_sort(tiny_db, mock_paper):
     """ORDER BY reuses the GROUP BY EQ masks through the planner cache:
     the sort pass after group_masks adds zero equality circuits."""
@@ -226,6 +227,7 @@ def bfv_db(bfv_micro):
     return db
 
 
+@pytest.mark.slow
 def test_via_plan_group_by_on_real_he(bfv_db, bfv_micro):
     bk = bfv_micro
     t = bk.t
@@ -246,6 +248,7 @@ def test_via_plan_group_by_on_real_he(bfv_db, bfv_micro):
     assert bk.stats.refresh == 0, "optimized DAG must stay in budget"
 
 
+@pytest.mark.slow
 def test_via_plan_translated_join_on_real_he(bfv_db, bfv_micro):
     bk = bfv_micro
     t = bk.t

@@ -1,0 +1,281 @@
+"""WorkloadCache + run_workload (engine/workload.py): noise-aware cache
+admission, cross-query fused scheduling, invalidation, fk-bank reuse.
+
+The regression anchor is the noise-unaware CSE bug: one planner's cache
+serving mask blocks across plans with different `downstream_muls`.  A
+deep plan's planned refresh mutates cached blocks in place; a shallow
+plan then consumed them at the wrong noise point and tripped
+`ExecReport.validate` (prediction overshoot / unpredicted refreshes).
+With WorkloadCache admission both plans must validate in both regimes.
+
+Fast unit tests run on a micro mock profile; the Q1→Q6→Q12→Q19 workload
+mix runs once at the paper profile in a module-scoped fixture.
+"""
+import numpy as np
+import pytest
+
+from repro.core.noise import NoiseProfile
+from repro.engine import queries as Q
+from repro.engine.backend import MockBackend
+from repro.engine.executor import Executor, run_via_plan
+from repro.engine.physical import CmpAtom
+from repro.engine.plan import (Agg, And, Factor, JoinHop, Pred, QueryPlan,
+                               Translated)
+from repro.engine.planner import Planner, noise_budget_levels
+from repro.engine.schema import ColumnSpec, TableSchema
+from repro.engine.storage import Database
+from repro.engine.workload import WorkloadCache, run_workload
+
+MIX = list(Q.PLAN_EXECUTABLE)             # Q1, Q6, Q12, Q19
+
+
+# ---------------------------------------------------------------------------
+# Micro-profile helpers (t=257 comparison circuits: milliseconds/test).
+# ---------------------------------------------------------------------------
+
+def _micro_db(seed=3, nrows=60):
+    bk = MockBackend(NoiseProfile(n=128, t=257, k=30))
+    db = Database(bk)
+    rng = np.random.default_rng(seed)
+    db.load_table(TableSchema("t", [
+        ColumnSpec("a", "int"), ColumnSpec("b", "int"),
+        ColumnSpec("v", "int")]), {
+        "a": rng.integers(1, 50, nrows), "b": rng.integers(1, 50, nrows),
+        "v": rng.integers(1, 20, nrows)}, nrows)
+    return bk, db
+
+
+def _degrade(bk, blocks, keep_levels=0):
+    """Consume a cached entry's noise budget in place (what a chain of
+    ct-ct products on an aliased handle does), down to `keep_levels`."""
+    for b in blocks:
+        while bk.levels_left(b) > keep_levels:
+            b.noise = bk.model.keyswitch(bk.model.mul(b.noise, b.noise))
+            b.depth += 1
+
+
+def _plan(name, where, fact="t"):
+    return QueryPlan(name=name, fact=fact, where=where,
+                     aggs=(Agg("sum", (Factor("v"),), "s"),
+                           Agg("count", (), "n")))
+
+
+# ---------------------------------------------------------------------------
+# Regression: plans with different downstream_muls on ONE shared cache.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("optimized", [True, False])
+def test_shared_cache_two_depth_regimes_validate(tiny_db, mock_paper,
+                                                 optimized):
+    """The ISSUE's bug reproducer: a deep plan (translated LT mask whose
+    planned refresh rejuvenates the cached blocks in place) followed by a
+    shallow plan consuming the same atom.  Pre-fix the shallow run
+    tripped validate() with a prediction overshoot; the noise-aware
+    cache + hit-aware report must pass in both regimes."""
+    pl = Planner(tiny_db, optimized=optimized)
+    P = Pred("p_size", "<", 26)
+    deep = QueryPlan(
+        name="deepA", fact="lineitem",
+        where=And((Translated(JoinHop("part", "l_partkey", "lineitem"), P),
+                   Pred("l_quantity", ">=", 1), Pred("l_quantity", "<=", 50),
+                   Pred("l_discount", ">=", 0),
+                   Pred("l_shipdate", "<", 19980101))),
+        group_by="l_returnflag",
+        aggs=(Agg("sum", (Factor("l_extendedprice"), Factor("l_discount"),
+                          Factor("l_quantity")), "x"),))
+    shallow = QueryPlan(name="shallowB", fact="part", where=P,
+                        aggs=(Agg("count", (), "n"),))
+
+    exA = Executor(pl)
+    gotA = exA.run(deep, validate=True)          # raises pre-fix semantics
+    rA = exA.report
+    if rA.refreshes - rA.cache_admit_refreshes > 0:
+        assert rA.predicted_refreshes > 0       # refreshes stay predicted
+
+    exB = Executor(pl)
+    gotB = exB.run(shallow, validate=True)      # tripped before the fix
+    if optimized:
+        assert exB.report.cache_hits > 0, "shallowB must consume the cache"
+
+    # Parity: shared-cache answers == cold fresh-planner answers.
+    cold = Planner(tiny_db, optimized=optimized)
+    assert gotA == run_via_plan(cold, deep, validate=False)
+    assert gotB == run_via_plan(Planner(tiny_db, optimized=optimized),
+                                shallow, validate=False)
+
+
+# ---------------------------------------------------------------------------
+# Admission unit tests (micro profile).
+# ---------------------------------------------------------------------------
+
+def test_admission_refreshes_degraded_entry():
+    """An entry whose blocks degraded below the consumer's need is
+    refreshed at admission: charged to OpStats, counted in the cache
+    stats, levels restored to min(need, budget)."""
+    bk, db = _micro_db()
+    cache = WorkloadCache()
+    pl = Planner(db, optimized=True, cache=cache)
+    ex = Executor(pl)
+    ex.run(_plan("warmup", Pred("a", "=", 7)), validate=True)
+    atom = CmpAtom("t", "a", "eq", 7)
+    entry = cache.entries[atom.key]
+    _degrade(bk, entry.blocks, keep_levels=1)
+    refr0 = bk.stats.refresh
+    need = entry.born_levels                    # deeper than what's left
+    served = cache.serve(bk, atom, need)
+    assert served is entry.blocks
+    assert cache.stats.admit_refreshes == 1
+    assert cache.stats.admit_refresh_blocks == len(entry.blocks)
+    assert bk.stats.refresh - refr0 == len(entry.blocks)
+    want = min(need, noise_budget_levels(bk))
+    assert all(bk.levels_left(b) >= want for b in entry.blocks)
+
+
+def test_admission_serves_when_entry_matches_cold_derivation():
+    """An entry at its born levels is served as-is even for a consumer
+    whose need exceeds them — a fresh derivation could do no better, so
+    cold-equivalence admits without a refresh."""
+    bk, db = _micro_db()
+    cache = WorkloadCache()
+    pl = Planner(db, optimized=True, cache=cache)
+    Executor(pl).run(_plan("warmup", Pred("a", "=", 7)), validate=True)
+    atom = CmpAtom("t", "a", "eq", 7)
+    born = cache.entries[atom.key].born_levels
+    assert cache.serve(bk, atom, born + 10) is not None
+    assert cache.stats.admit_refreshes == 0
+
+
+def test_rederive_policy_drops_degraded_entry():
+    bk, db = _micro_db()
+    cache = WorkloadCache(policy="rederive")
+    pl = Planner(db, optimized=True, cache=cache)
+    Executor(pl).run(_plan("warmup", Pred("a", "=", 7)), validate=True)
+    atom = CmpAtom("t", "a", "eq", 7)
+    _degrade(bk, cache.entries[atom.key].blocks, keep_levels=1)
+    assert cache.serve(bk, atom, 5) is None
+    assert cache.stats.rederives == 1
+    assert atom.key not in cache.entries
+    # The evaluator transparently re-derives on the next get().
+    ev = pl.evaluator()
+    blocks = ev.get(atom, 5)
+    assert all(bk.levels_left(b) >= 5 for b in blocks)
+
+
+def test_degraded_entry_never_causes_unpredicted_refresh():
+    """End to end: a deeper consumer admitting a degraded cached mask
+    pays the refresh AT ADMISSION (accounted as planned), so
+    ExecReport.validate's refresh-free contract still holds."""
+    bk, db = _micro_db()
+    cache = WorkloadCache()
+    pl = Planner(db, optimized=True, cache=cache)
+    Executor(pl).run(_plan("warmup", Pred("a", "=", 7)), validate=True)
+    atom = CmpAtom("t", "a", "eq", 7)
+    _degrade(bk, cache.entries[atom.key].blocks, keep_levels=0)
+    deeper = _plan("deeper", And((Pred("a", "=", 7), Pred("b", "=", 3),
+                                  Pred("v", "=", 5))))
+    ex = Executor(pl)
+    got = ex.run(deeper, validate=True)         # must not raise
+    r = ex.report
+    assert r.cache_admit_refreshes > 0, "admission must have refreshed"
+    assert r.refreshes - r.cache_admit_refreshes <= 0
+    assert got == run_via_plan(Planner(db, optimized=True), deeper,
+                               validate=False)
+
+
+# ---------------------------------------------------------------------------
+# Invalidation on table re-load.
+# ---------------------------------------------------------------------------
+
+def test_reload_invalidates_cached_masks():
+    bk, db = _micro_db()
+    cache = WorkloadCache()
+    pl = Planner(db, optimized=True, cache=cache)
+    plan = _plan("q", Pred("a", "=", 7))
+    first = Executor(pl).run(plan, validate=True)
+    assert len(cache.entries) > 0
+    misses0 = cache.stats.misses
+
+    rng = np.random.default_rng(99)
+    nrows = 60
+    new = {"a": rng.integers(1, 50, nrows), "b": rng.integers(1, 50, nrows),
+           "v": rng.integers(1, 20, nrows)}
+    db.load_table(db.tables["t"].schema, new, nrows)
+    assert cache.stats.invalidations > 0
+    assert len(cache.entries) == 0, "stale masks must not survive a reload"
+
+    second = Executor(pl).run(plan, validate=True)
+    assert cache.stats.misses > misses0, "reload forces re-derivation"
+    exp = {"s": int(new["v"][new["a"] == 7].sum()) % bk.t,
+           "n": int((new["a"] == 7).sum()) % bk.t}
+    assert second == exp, "post-reload answers must reflect the new data"
+
+
+def test_reload_only_invalidates_that_table():
+    bk, db = _micro_db()
+    rng = np.random.default_rng(5)
+    db.load_table(TableSchema("u", [ColumnSpec("x", "int")]),
+                  {"x": rng.integers(1, 50, 30)}, 30)
+    cache = WorkloadCache()
+    pl = Planner(db, optimized=True, cache=cache)
+    Executor(pl).run(_plan("qt", Pred("a", "=", 7)), validate=True)
+    Executor(pl).run(QueryPlan(name="qu", fact="u", where=Pred("x", "=", 9),
+                               aggs=(Agg("count", (), "n"),)), validate=True)
+    keys_before = set(cache.entries)
+    db.load_table(TableSchema("u", [ColumnSpec("x", "int")]),
+                  {"x": rng.integers(1, 50, 30)}, 30)
+    assert all(k[0] == "t" for k in cache.entries)
+    assert {k for k in keys_before if k[0] == "t"} == set(cache.entries)
+
+
+# ---------------------------------------------------------------------------
+# Cross-query workload scheduling at the paper profile.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def workload(tiny_db, mock_paper):
+    """One cold + one warm pass of the full executable mix through
+    `run_workload` on a persistent cache."""
+    bk = mock_paper
+    bk.stats.reset()
+    bk.op_log.clear()
+    cache = WorkloadCache()
+    pl = Planner(tiny_db, optimized=True, cache=cache)
+    plans = [Q.QUERIES[qn][0]() for qn in MIX]
+    cold = run_workload(pl, plans)
+    warm = run_workload(pl, plans)
+    bk.stats.reset()
+    bk.op_log.clear()
+    return {"cold": cold, "warm": warm, "cache": cache}
+
+
+def test_workload_warm_cold_parity(workload, tiny_db):
+    cold, warm = workload["cold"], workload["warm"]
+    assert cold.results == warm.results, "warm pass must decrypt identically"
+    oracles = [Q.QUERIES[qn][2](tiny_db) for qn in MIX]
+    assert cold.results == oracles, "workload results must match the oracle"
+
+
+def test_workload_counter_accounting(workload):
+    cold, warm = workload["cold"], workload["warm"]
+    assert cold.cache.hits == 0 and cold.cache.misses > 0
+    assert warm.cache.misses == 0, "every warm atom must hit"
+    assert warm.cache.hits > 0
+    assert warm.hit_rate > 0.5
+    # Per-query reports see their own hit counts.
+    assert all(r.cache_hits > 0 for r in warm.reports)
+    assert all(r.cache_hits == 0 for r in cold.reports)
+
+
+def test_workload_warm_pass_launches_fewer_circuits(workload):
+    cold, warm = workload["cold"], workload["warm"]
+    assert warm.launches < cold.launches
+    assert warm.muls < cold.muls
+
+
+def test_workload_fk_bank_reuse(workload):
+    """Translated joins (Q12 aux, Q19 hops) reuse the per-key EQ bank
+    instead of re-running nparent EQ circuits."""
+    cold, warm = workload["cold"], workload["warm"]
+    assert cold.cache.fk_misses > 0
+    assert warm.cache.fk_misses == 0
+    assert warm.cache.fk_hits > 0
