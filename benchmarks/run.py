@@ -17,8 +17,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (depth_model, mask_fusion, packing_scaling, primitive_ops,
-                   q6_breakdown, roofline, storage, tpch_queries,
-                   workload_cache)
+                   q6_breakdown, roofline, sharded_scan, storage,
+                   tpch_queries, workload_cache)
     mods = {
         "depth_model": depth_model,
         "primitive_ops": primitive_ops,
@@ -27,6 +27,7 @@ def main() -> None:
         "packing_scaling": packing_scaling,
         "mask_fusion": mask_fusion,
         "workload_cache": workload_cache,
+        "sharded_scan": sharded_scan,
         "tpch_queries": tpch_queries,
         "roofline": roofline,
     }

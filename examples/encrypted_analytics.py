@@ -26,9 +26,9 @@ from repro.engine.planner import Planner
 from repro.engine.workload import WorkloadCache, run_workload
 
 
-def run_workload_demo(bk, db):
+def run_workload_demo(bk, db, shards=None):
     cache = WorkloadCache()
-    pl = Planner(db, optimized=True, cache=cache)
+    pl = Planner(db, optimized=True, cache=cache, shards=shards)
     plans = [Q.QUERIES[qn][0]() for qn in Q.PLAN_EXECUTABLE]
     print(f"{'pass':6s} {'ok':4s} {'launches':>9s} {'muls':>8s} "
           f"{'circuits':>9s} {'hits':>6s} {'wall_s':>7s}")
@@ -52,6 +52,10 @@ def main():
     ap.add_argument("--workload", action="store_true",
                     help="cold/warm Q1+Q6+Q12+Q19 mix through the "
                          "cross-query workload cache")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="shard the block scans over N mesh data lanes "
+                         "(engine/sharded.py); prints the modeled "
+                         "distributed speedup per optimized query")
     args = ap.parse_args()
     scale = getattr(tpch.Scale, args.scale)()
 
@@ -61,24 +65,42 @@ def main():
           f"{sum(t.ct_count for t in db.tables.values())} ciphertexts "
           f"(paper profile: n=32768, logQ~881, t=65537)\n")
     if args.workload:
-        run_workload_demo(bk, db)
+        run_workload_demo(bk, db, shards=args.shards)
         return
 
+    # Measured per-op seconds extrapolated to paper parameters
+    # (results/op_costs.json; see benchmarks/common.py) — used only to
+    # price the --shards distribution ledger.
+    costs = {"mul": 15.8, "mul_plain": 17.2, "mul_scalar": 0.72,
+             "add": 0.46, "rotate": 33.1, "refresh": 44.0}
+    shard_col = f" {'shard speedup':>14s}" if args.shards else ""
     print(f"{'query':5s} {'opt: ok':8s} {'muls':>7s} {'refresh':>8s}   "
-          f"{'unopt: ok':9s} {'muls':>7s} {'refresh':>8s}")
+          f"{'unopt: ok':9s} {'muls':>7s} {'refresh':>8s}{shard_col}")
     for qn in ["Q1", "Q4", "Q5", "Q6", "Q8", "Q12", "Q14", "Q17", "Q19"]:
         _, run_f, oracle_f = Q.QUERIES[qn]
         row = [qn]
+        speedup = ""
         for optimized in (True, False):
-            pl = Planner(db, optimized=optimized)
+            pl = Planner(db, optimized=optimized,
+                         shards=args.shards if optimized else None)
             bk.stats.reset()
             t0 = time.time()
             ok = run_f(pl) == oracle_f(db)
             row += [str(ok), str(bk.stats.mul), str(bk.stats.refresh)]
+            if optimized and pl.shard_ctx is not None:
+                from repro.engine.sharded import ShardContext
+                serial = ShardContext(1)
+                serial.dist, serial.repl = pl.shard_ctx.dist, pl.shard_ctx.repl
+                serial.folds = pl.shard_ctx.folds
+                speedup = (f"{serial.modeled_seconds(costs) / pl.shard_ctx.modeled_seconds(costs):>13.2f}x")
         print(f"{row[0]:5s} {row[1]:8s} {row[2]:>7s} {row[3]:>8s}   "
-              f"{row[4]:9s} {row[5]:>7s} {row[6]:>8s}")
+              f"{row[4]:9s} {row[5]:>7s} {row[6]:>8s} {speedup}")
     print("\nrefresh = bootstrap-equivalent (44 s each at paper scale): "
           "the noise-aware planner's job is the left column staying ~0.")
+    if args.shards:
+        print(f"shard speedup = modeled scan time at 1 vs {args.shards} "
+              f"mesh data lanes (distributed block lanes divide; "
+              f"singleton work and psum combines do not).")
 
 
 if __name__ == "__main__":

@@ -61,21 +61,33 @@ class CiphertextBatch:
     data is (nblocks, 2, k, n).  Blocks of an encrypted column go through
     identical circuits, so a single analytic noise scalar — the max over
     the stacked blocks — serves the whole batch.  When block noises do
-    differ (e.g. after a validity multiply on the last block), the max is
-    a *conservative* bound: batched plans never under-estimate noise
-    relative to the per-block loop.
+    differ (e.g. after a validity multiply on the last block), `noise`
+    is a per-block numpy vector of length `nblocks` instead, which lets
+    `_maybe_refresh`/`ensure_levels` refresh only the exhausted lanes
+    rather than paying a conservative-max penalty for the whole batch.
+
+    `live` supports sharded execution (engine/sharded.py): when the lane
+    count is padded up to a multiple of the shard count with zero
+    blocks, `live` records the logical block count.  `nblocks` reports
+    the live count (so OpStats/noise accounting stay byte-identical to
+    the unpadded path) while `nphys` reports the padded leading axis.
     """
     data: jnp.ndarray        # (nblocks, 2, k, n) int64
-    noise: float
+    noise: "float | np.ndarray"
     params: HEParams
+    live: int | None = None
 
     @property
     def nblocks(self) -> int:
+        return self.live if self.live is not None else self.data.shape[0]
+
+    @property
+    def nphys(self) -> int:
         return self.data.shape[0]
 
     @property
     def budget(self) -> float:
-        return -(self.noise + 1.0)
+        return float(-(np.max(self.noise) + 1.0))
 
 
 @dataclasses.dataclass
@@ -159,14 +171,26 @@ class BFVContext:
         (the batched one, when single and batch are mixed)."""
         return a if a.data.ndim >= b.data.ndim else b
 
+    @staticmethod
+    def pack_noises(noises: list) -> "float | np.ndarray":
+        """Scalar when uniform (the common case), else a per-block vector."""
+        vals = [float(v) for v in noises]
+        if all(v == vals[0] for v in vals):
+            return vals[0]
+        return np.asarray(vals, dtype=np.float64)
+
     def stack_cts(self, cts: list) -> CiphertextBatch:
         """Stack single-block ciphertexts into one batch (pure layout)."""
         assert cts and all(isinstance(c, Ciphertext) for c in cts)
         return CiphertextBatch(jnp.stack([c.data for c in cts]),
-                               max(c.noise for c in cts), self.params)
+                               self.pack_noises([c.noise for c in cts]),
+                               self.params)
 
     def unstack_cts(self, batch: CiphertextBatch) -> list:
-        return [Ciphertext(batch.data[i], batch.noise, self.params)
+        per = batch.noise if np.ndim(batch.noise) else None
+        return [Ciphertext(batch.data[i],
+                           float(per[i]) if per is not None else batch.noise,
+                           self.params)
                 for i in range(batch.nblocks)]
 
     # ------------------------------------------------------------- sampling
@@ -315,7 +339,12 @@ class BFVContext:
 
     def _mul_plain_impl(self, data, m):
         lq = self.limb_q
-        m_ntt = lq.ntt(m[None, :] % self.qQ[:, None])
+        if m.ndim == 2:
+            # per-block plaintexts: m is (nblocks, n) against a
+            # (nblocks, 2, k, n) batch (fused broadcast_slot extraction)
+            m_ntt = lq.ntt(m[:, None, :] % self.qQ[None, :, None])
+        else:
+            m_ntt = lq.ntt(m[None, :] % self.qQ[:, None])
         out0 = lq.intt(lq.mul(lq.ntt(data[..., 0, :, :]), m_ntt))
         out1 = lq.intt(lq.mul(lq.ntt(data[..., 1, :, :]), m_ntt))
         return jnp.stack([out0, out1], axis=-3)
@@ -463,11 +492,16 @@ class BFVContext:
         """Sum a batch across its block axis into one ciphertext — the
         cross-block half of an aggregation.  Residues match the
         sequential add chain exactly (mod-q sums commute); the noise
-        bound replays the same sequential `add` recurrence."""
-        data = jnp.sum(batch.data, axis=0) % self.qQ[:, None]
-        noise = batch.noise
-        for _ in range(batch.nblocks - 1):
-            noise = self.noise_model.add(noise, batch.noise)
+        bound replays the same sequential `add` recurrence.  Only the
+        `live` lanes participate: shard padding lanes may hold garbage
+        after broadcasted single×batch ops and must never enter a sum."""
+        nb = batch.nblocks
+        data = jnp.sum(batch.data[:nb], axis=0) % self.qQ[:, None]
+        per = batch.noise if np.ndim(batch.noise) else None
+        noise = float(per[0]) if per is not None else batch.noise
+        for i in range(1, nb):
+            noise = self.noise_model.add(
+                noise, float(per[i]) if per is not None else batch.noise)
         return Ciphertext(data, noise, self.params)
 
     # ------------------------------------------------------- noise measure

@@ -25,6 +25,7 @@ match, so a whole column of ciphertext blocks runs as one kernel launch.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 
 import jax
@@ -45,6 +46,29 @@ _Q_MIN, _Q_MAX = 1 << 28, 1 << 30
 
 def default_backend() -> str:
     return os.environ.get("NSHEDB_LIMB_BACKEND", "auto")
+
+
+# Depth of nested force_ref() contexts.  While > 0, every LimbOps call
+# takes the jnp reference path regardless of the instance's backend flag.
+_FORCE_REF = 0
+
+
+@contextlib.contextmanager
+def force_ref():
+    """Route all limb primitives through the jnp reference path.
+
+    shard_map bodies cannot host a Pallas interpret-mode launch (the
+    interpreter's host callbacks do not trace under the per-shard
+    closed-over mesh), so the sharded executor wraps shard-local
+    evaluation in this context.  The flag is consulted at trace time:
+    a function traced inside the context bakes in the ref path.
+    """
+    global _FORCE_REF
+    _FORCE_REF += 1
+    try:
+        yield
+    finally:
+        _FORCE_REF -= 1
 
 
 def pallas_supported(primes) -> bool:
@@ -110,12 +134,15 @@ class LimbOps:
         """Tile a per-limb table (k, ...) to (B*k, ...) row layout."""
         return jnp.concatenate([tab] * B, axis=0) if B > 1 else tab
 
+    def _use_ref(self) -> bool:
+        return self.backend == "ref" or _FORCE_REF > 0
+
     # ----------------------------------------------------- pointwise ops
     def _pointwise(self, a, b, kern_fn, ref_fn):
         shape = jnp.broadcast_shapes(a.shape, b.shape)
         a = jnp.broadcast_to(a, shape)
         b = jnp.broadcast_to(b, shape)
-        if self.backend == "ref":
+        if self._use_ref():
             return ref_fn(a.reshape(-1, self.n), b.reshape(-1, self.n)).reshape(shape)
         ar, B = self._rows(a)
         br, _ = self._rows(b)
@@ -155,7 +182,7 @@ class LimbOps:
         """Forward negacyclic NTT over (..., k, n)."""
         shape = a.shape
         ar, B = self._rows(a)
-        if self.backend == "ref":
+        if self._use_ref():
             out = nttm.ntt_ref(ar, self._tile(self.psi, B), self._tile(self.q, B))
         else:
             out = ntt_fwd_pallas(
@@ -168,7 +195,7 @@ class LimbOps:
         """Inverse negacyclic NTT over (..., k, n)."""
         shape = a.shape
         ar, B = self._rows(a)
-        if self.backend == "ref":
+        if self._use_ref():
             out = nttm.intt_ref(ar, self._tile(self.ipsi, B),
                                 self._tile(self.ninv, B), self._tile(self.q, B))
         else:

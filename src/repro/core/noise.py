@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 from .params import HEParams
 
 
@@ -80,31 +82,51 @@ class NoiseModel:
         return self.log_t - self.logQ + self.log_B + math.log2(2 * p.n + p.n + 1)
 
     @staticmethod
-    def _logadd(v1: float, v2: float) -> float:
+    def _logadd(v1, v2):
         """log2(2^v1 + 2^v2), stable — |u + w| <= |u| + |w|.  Sequential
-        sums of k equal-noise terms grow by log2(k), not by k bits."""
-        hi, lo = (v1, v2) if v1 >= v2 else (v2, v1)
-        d = lo - hi
-        if d < -50:
-            return hi
-        return hi + math.log2(1.0 + 2.0 ** d)
+        sums of k equal-noise terms grow by log2(k), not by k bits.
 
-    def add(self, v1: float, v2: float) -> float:
+        Accepts floats or numpy arrays (per-block noise vectors); scalar
+        inputs take the original scalar path bit-for-bit.
+        """
+        if np.ndim(v1) == 0 and np.ndim(v2) == 0:
+            hi, lo = (v1, v2) if v1 >= v2 else (v2, v1)
+            d = lo - hi
+            if d < -50:
+                return hi
+            return hi + math.log2(1.0 + 2.0 ** d)
+        hi = np.maximum(v1, v2)
+        d = np.minimum(v1, v2) - hi
+        return np.where(d < -50, hi, hi + np.log2(1.0 + 2.0 ** np.maximum(d, -60.0)))
+
+    def add(self, v1, v2):
         return self._logadd(v1, v2)
 
-    def add_many(self, vs: list[float]) -> float:
-        return max(vs) + math.log2(max(len(vs), 1))
+    def add_many(self, vs):
+        shift = math.log2(max(len(vs), 1))
+        if all(np.ndim(v) == 0 for v in vs):
+            return max(vs) + shift
+        hi = vs[0]
+        for v in vs[1:]:
+            hi = np.maximum(hi, v)
+        return hi + shift
 
-    def mul(self, v1: float, v2: float) -> float:
+    def mul(self, v1, v2):
         # (|v1|+|v2|) * t * n  + tensor rounding term (t/Q-scale, negligible
         # until the very bottom of the budget).
         grow = self.log_t + self.log_n + 1.0
         base = self._logadd(v1, v2) + grow
         floor_term = self.log_t + self.log_n - self.logQ + 2.0
-        return max(base, floor_term)
+        if np.ndim(base) == 0:
+            return max(base, floor_term)
+        return np.maximum(base, floor_term)
 
-    def levels_left(self, v: float) -> int:
-        """Sequential ct-ct multiplications this ciphertext still supports."""
+    def levels_left(self, v) -> int:
+        """Sequential ct-ct multiplications this ciphertext still supports.
+
+        For a per-block noise vector this is the *worst* lane's count."""
+        if np.ndim(v):
+            v = float(np.max(v))
         d = 0
         while True:
             v2 = self.keyswitch(self.mul(v, v))
@@ -117,25 +139,29 @@ class NoiseModel:
         q_max = max(p.Q.primes) if hasattr(p, "Q") else p.q_max
         return self.log_t - self.logQ + self.log_n + math.log2(p.k) + math.log2(q_max) + self.log_B - 1.0
 
-    def keyswitch(self, v: float) -> float:
-        return max(v, self.keyswitch_addend()) + 1.0
+    def keyswitch(self, v):
+        addend = self.keyswitch_addend()
+        if np.ndim(v) == 0:
+            return max(v, addend) + 1.0
+        return np.maximum(v, addend) + 1.0
 
-    def rotate(self, v: float) -> float:
+    def rotate(self, v):
         return self.keyswitch(v)
 
-    def mul_plain(self, v: float, plain_inf_norm: float | None = None) -> float:
+    def mul_plain(self, v, plain_inf_norm: float | None = None):
         norm = plain_inf_norm if plain_inf_norm is not None else self.params.t / 2
         return v + self.log_n + math.log2(max(norm, 1.0))
 
-    def mul_scalar(self, v: float, c: int) -> float:
+    def mul_scalar(self, v, c: int):
         """Multiply by a constant polynomial (degree 0): |v| grows by |c| only,
         no n factor — the reason BSGS coefficient multiplies are cheap."""
         t = self.params.t
         cc = abs(c % t if (c % t) <= t // 2 else (c % t) - t)
         return v + math.log2(max(cc, 1))
 
-    def budget(self, v: float) -> float:
-        """Remaining invariant-noise budget in bits (<0 means failure)."""
+    def budget(self, v):
+        """Remaining invariant-noise budget in bits (<0 means failure).
+        Elementwise over per-block noise vectors."""
         return -(v + 1.0)
 
     # --- planner-facing depth model (paper Table 3) ---

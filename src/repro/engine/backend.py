@@ -21,12 +21,20 @@ single × batch operands, which broadcast), so the comparison circuits in
 core/compare.py evaluate an entire column per jitted call instead of one
 Python iteration per block.  OpStats counting is per *block*, not per
 call: an op on an 8-block batch charges 8, so refresh-free profiles are
-identical to the looped path.  Two deliberate approximations exist when
-blocks carry *non-uniform* noise: a batch tracks the conservative max
-(never under-estimating), and a mid-circuit refresh hits the stacked
-temporary rather than the stored column blocks — so refresh counts on
-noise-exhausted plans may differ from the looped schedule (decrypted
-results never do; see ROADMAP open items).
+identical to the looped path.  Batches with *non-uniform* block noise
+carry a per-block noise vector, and `_maybe_refresh`/`ensure_levels`
+refresh only the exhausted lanes — matching the looped schedule's
+refresh counts.  One approximation remains: a mid-circuit refresh hits
+the stacked temporary rather than the stored column blocks (decrypted
+results never differ).
+
+Sharded execution (engine/sharded.py, DESIGN §4): when a ShardContext
+is active on the backend, `stack_blocks` pads lane counts to a multiple
+of the shard count with zero blocks (`live` on the batch keeps stats,
+noise and decrypt on the logical count), `fold_blocks` reduces
+shard-local partials with a psum collective when a real mesh is
+attached, and every charge is mirrored into the context's
+distributed/replicated cost ledger for scaling projections.
 
 Both count operations in OpStats and track (noise, depth) per value, so
 the planner's predictions are validated against the same model regardless
@@ -93,6 +101,10 @@ class _BackendBase:
         self.stats = OpStats()
         self.auto_refresh = True   # refresh (count a bootstrap) on exhaustion
         self.refresh_log: list[str] = []
+        # Active ShardContext (engine/sharded.py) or None.  When set,
+        # stack_blocks pads lane counts to the shard count and every
+        # charge is mirrored into the context's distribution ledger.
+        self.shard_ctx = None
         from collections import Counter
         self.op_log = Counter()    # operator-level counts (eq/cmp/sum/...)
 
@@ -102,31 +114,71 @@ class _BackendBase:
     model: NoiseModel
 
     def _nblocks(self, ct) -> int:
-        """Blocks carried by a value: batches charge per-block stats."""
+        """Blocks carried by a value: batches charge per-block stats.
+        Reports *live* blocks — shard padding lanes are never counted."""
         raise NotImplementedError
+
+    def _nblocks_phys(self, ct) -> int:
+        """Physical lanes incl. shard padding (device-time accounting)."""
+        return self._nblocks(ct)
 
     def _count(self, *cts) -> int:
         self.stats.launches += 1
         return max(self._nblocks(c) for c in cts)
 
-    def _budget(self, noise: float) -> float:
+    def _charge_units(self, field: str, units: int,
+                      phys_units: int | None = None,
+                      distributed: bool = False) -> None:
+        """Charge `units` to stats.<field>; mirror into the shard ledger
+        (physical units — pads occupy device lanes) when one is active."""
+        setattr(self.stats, field, getattr(self.stats, field) + units)
+        if self.shard_ctx is not None and units:
+            self.shard_ctx.record(
+                field, phys_units if phys_units is not None else units,
+                distributed)
+
+    def _charge(self, field: str, *cts, mult: int = 1) -> None:
+        """The standard per-op charge: one launch, max-blocks units."""
+        units = self._count(*cts) * mult
+        phys = max(self._nblocks_phys(c) for c in cts) * mult
+        dist = any(self._nblocks_phys(c) > 1 for c in cts)
+        self._charge_units(field, units, phys, dist)
+
+    def _budget(self, noise):
         return self.model.budget(noise)
 
-    def _maybe_refresh(self, ct, post_noise: float, what: str):
+    def _refresh_lanes(self, ct, exhausted) -> "list[int] | None":
+        """Lanes of `ct` to refresh given an elementwise exhaustion mask.
+        None means 'all of it' (scalar noise, or every lane exhausted)."""
+        if np.ndim(ct.noise) == 0 or self._nblocks(ct) == 1:
+            return None
+        mask = np.broadcast_to(np.asarray(exhausted), (self._nblocks(ct),))
+        lanes = [i for i in range(self._nblocks(ct)) if mask[i]]
+        return None if len(lanes) == self._nblocks(ct) else lanes
+
+    def _charge_refresh(self, ct, lanes, what: str) -> None:
+        n = self._nblocks(ct) if lanes is None else len(lanes)
+        self._charge_units("refresh", n, n, self._nblocks_phys(ct) > 1)
+        self.refresh_log.append(what)
+
+    def _maybe_refresh(self, ct, post_noise, what: str):
         """If the upcoming op would exhaust the budget, refresh `ct` first.
 
         Refreshes mutate the ciphertext IN PLACE: every plan-DAG edge that
         still references this value sees the refreshed version, exactly as
-        a real engine bootstraps a value once (not per consumer)."""
-        if self._budget(post_noise) > 0:
+        a real engine bootstraps a value once (not per consumer).  With a
+        per-block noise vector, only the exhausted lanes are refreshed.
+        """
+        exhausted = np.asarray(self._budget(post_noise)) <= 0
+        if not exhausted.any():
             return ct
         if not self.auto_refresh:
             raise RuntimeError(
                 f"noise budget exhausted in {what} "
-                f"(post-op budget {self._budget(post_noise):.1f} bits)")
-        self.stats.refresh += self._nblocks(ct)
-        self.refresh_log.append(what)
-        self.refresh_inplace(ct)
+                f"(post-op budget {float(np.min(self._budget(post_noise))):.1f} bits)")
+        lanes = self._refresh_lanes(ct, exhausted)
+        self._charge_refresh(ct, lanes, what)
+        self.refresh_inplace(ct, lanes)
         return ct
 
     def _track_depth(self, d: int) -> int:
@@ -140,12 +192,23 @@ class _BackendBase:
     def ensure_levels(self, ct, levels: int):
         """Planned refresh (§2.1.1 'selectively apply bootstrapping'): if
         the ciphertext cannot absorb `levels` more multiplications, refresh
-        it *once* here rather than thrashing mid-circuit."""
+        it *once* here rather than thrashing mid-circuit.  Per-block noise
+        vectors refresh only the lanes that are actually short."""
+        what = f"planned(levels={levels})"
+        if np.ndim(ct.noise) and self._nblocks(ct) > 1:
+            per = np.asarray(ct.noise)
+            short = np.array([self.model.levels_left(float(per[i])) < levels
+                              for i in range(self._nblocks(ct))])
+            if not short.any():
+                return ct
+            lanes = self._refresh_lanes(ct, short)
+            self._charge_refresh(ct, lanes, what)
+            self.refresh_inplace(ct, lanes)
+            return ct
         if self.levels_left(ct) >= levels:
             return ct
-        self.stats.refresh += self._nblocks(ct)
-        self.refresh_log.append(f"planned(levels={levels})")
-        self.refresh_inplace(ct)
+        self._charge_refresh(ct, None, what)
+        self.refresh_inplace(ct, None)
         return ct
 
     # convenience aliases used by compare.py ------------------------------
@@ -190,6 +253,9 @@ class BFVBackend(_BackendBase):
     def _nblocks(self, ct) -> int:
         return ct.nblocks if isinstance(ct, CiphertextBatch) else 1
 
+    def _nblocks_phys(self, ct) -> int:
+        return ct.nphys if isinstance(ct, CiphertextBatch) else 1
+
     # -- depth side-table (Ciphertext is a frozen-ish dataclass) ----------
     def _d(self, ct) -> int:
         return self._depth.get(id(ct), 0)
@@ -200,8 +266,28 @@ class BFVBackend(_BackendBase):
 
     # -- block batching ---------------------------------------------------
     def stack_blocks(self, blocks: list) -> CiphertextBatch:
-        """Stack a column's block list for one batched call (pure layout)."""
+        """Stack a column's block list for one batched call (pure layout).
+
+        Under an active ShardContext the lane count is padded up to a
+        multiple of the shard count with zero blocks (exact additive
+        identities; `live` keeps accounting on the logical count) and
+        the batch is placed across the mesh "data" axis when a real
+        mesh is attached — uneven tables compile to one even launch."""
         batch = self.ctx.stack_cts(blocks)
+        ctx = self.shard_ctx
+        if ctx is not None and ctx.shards > 1 and len(blocks) > 1:
+            from .sharded import pad_to, place_batch
+            import jax.numpy as jnp
+            nphys = pad_to(len(blocks), ctx.shards)
+            data = batch.data
+            if nphys > len(blocks):
+                pad = jnp.zeros_like(batch.data[:1])
+                data = jnp.concatenate(
+                    [batch.data] + [pad] * (nphys - len(blocks)))
+            if ctx.mesh is not None:
+                data = place_batch(data, ctx.mesh)
+            batch = CiphertextBatch(data, batch.noise, batch.params,
+                                    live=len(blocks))
         return self._set_d(batch, max(self._d(b) for b in blocks))
 
     def unstack_blocks(self, batch: CiphertextBatch) -> list:
@@ -210,10 +296,31 @@ class BFVBackend(_BackendBase):
 
     def fold_blocks(self, batch: CiphertextBatch) -> Ciphertext:
         """Cross-block sum of a batch (the inter-block half of SUM/COUNT).
-        Charges the same nblocks-1 adds as the sequential fold."""
+        Charges the same nblocks-1 adds as the sequential fold.  With a
+        real scan mesh attached the reduction runs shard-local and
+        combines partials with a psum collective (engine/sharded.py)."""
+        ctx = self.shard_ctx
         self.stats.add += max(batch.nblocks - 1, 0)
         self.stats.launches += 1
-        return self._set_d(self.ctx.fold_add(batch), self._d(batch))
+        if ctx is not None:
+            # ledger: shard-local adds + one psum tree (record_fold owns
+            # the split; stats.add above stays the sequential-fold charge)
+            ctx.record_fold(batch.nblocks, self._nblocks_phys(batch))
+        if (ctx is not None and ctx.mesh is not None
+                and batch.nphys % ctx.shards == 0 and batch.nphys > 1):
+            from .sharded import sharded_fold
+            from ..core.bfv import Ciphertext as _Ct
+            raw = sharded_fold(batch.data, batch.nblocks, ctx.mesh)
+            data = raw % self.ctx.qQ[:, None]
+            per = batch.noise if np.ndim(batch.noise) else None
+            noise = float(per[0]) if per is not None else batch.noise
+            for i in range(1, batch.nblocks):
+                noise = self.model.add(
+                    noise, float(per[i]) if per is not None else batch.noise)
+            out = _Ct(data, noise, batch.params)
+        else:
+            out = self.ctx.fold_add(batch)
+        return self._set_d(out, self._d(batch))
 
     # -- io ----------------------------------------------------------------
     def encrypt(self, vec) -> Ciphertext:
@@ -227,7 +334,9 @@ class BFVBackend(_BackendBase):
         self.stats.decrypt += self._nblocks(ct)
         polys = self.ctx.decrypt(ct, self.keys.sk)
         if isinstance(ct, CiphertextBatch):
-            return np.stack([np.asarray(self.enc.decode(p)) for p in polys])
+            # live lanes only: shard padding never reaches the client
+            return np.stack([np.asarray(self.enc.decode(polys[i]))
+                             for i in range(ct.nblocks)])
         return np.asarray(self.enc.decode(polys))
 
     def refresh(self, ct: Ciphertext) -> Ciphertext:
@@ -235,11 +344,28 @@ class BFVBackend(_BackendBase):
         engine's planner exists to make sure this is never reached)."""
         return self.encrypt(self.decrypt(ct))
 
-    def refresh_inplace(self, ct) -> None:
+    def refresh_inplace(self, ct, lanes: list | None = None) -> None:
         if isinstance(ct, CiphertextBatch):
+            if lanes is not None:
+                # partial: refresh only the exhausted lanes of the batch
+                per = (np.asarray(ct.noise, dtype=np.float64).copy()
+                       if np.ndim(ct.noise)
+                       else np.full(ct.nblocks, float(ct.noise)))
+                data = ct.data
+                for i in lanes:
+                    fb = self.refresh(Ciphertext(ct.data[i], float(per[i]),
+                                                 self.params))
+                    data = data.at[i].set(fb.data)
+                    per[i] = fb.noise
+                ct.data, ct.noise = data, self.ctx.pack_noises(list(per))
+                return  # depth unchanged: un-refreshed lanes keep history
             fresh = [self.refresh(b) for b in self.ctx.unstack_cts(ct)]
             batch = self.ctx.stack_cts(fresh)
-            ct.data, ct.noise = batch.data, batch.noise
+            if ct.nphys > batch.nphys:  # padded: keep the zero pad lanes
+                ct.data = ct.data.at[:batch.nphys].set(batch.data)
+                ct.noise = batch.noise
+            else:
+                ct.data, ct.noise = batch.data, batch.noise
         else:
             fresh = self.refresh(ct)
             ct.data = fresh.data
@@ -254,11 +380,11 @@ class BFVBackend(_BackendBase):
 
     # -- ring ops ------------------------------------------------------------
     def add(self, a, b):
-        self.stats.add += self._count(a, b)
+        self._charge("add", a, b)
         return self._set_d(self.ctx.add(a, b), max(self._d(a), self._d(b)))
 
     def sub(self, a, b):
-        self.stats.add += self._count(a, b)
+        self._charge("add", a, b)
         return self._set_d(self.ctx.sub(a, b), max(self._d(a), self._d(b)))
 
     def neg(self, a):
@@ -266,36 +392,45 @@ class BFVBackend(_BackendBase):
 
     def mul(self, a, b):
         post = self.model.keyswitch(self.model.mul(a.noise, b.noise))
-        if self._budget(post) <= 0:
+        if np.any(np.asarray(self._budget(post)) <= 0):
             a = self._maybe_refresh(a, post, "mul")
             b = self._maybe_refresh(b, self.model.keyswitch(
                 self.model.mul(a.noise, b.noise)), "mul")
-        self.stats.mul += self._count(a, b)
+        self._charge("mul", a, b)
         out = self.ctx.mul(a, b, self.keys.rlk)
         return self._set_d(out, max(self._d(a), self._d(b)) + 1)
 
     def mul_plain(self, a, vec):
         post = self.model.mul_plain(a.noise)
         a = self._maybe_refresh(a, post, "mul_plain")
-        self.stats.mul_plain += self._count(a)
-        poly = self.enc.encode(np.asarray(vec, dtype=np.int64) % self.t)
+        self._charge("mul_plain", a)
+        arr = np.asarray(vec, dtype=np.int64) % self.t
+        if arr.ndim == 2:
+            # per-block plaintexts against a batch (fused broadcast_slot):
+            # zero rows cover any shard padding lanes
+            nphys = self._nblocks_phys(a)
+            rows = np.zeros((nphys, self.slots), dtype=np.int64)
+            rows[: arr.shape[0], : arr.shape[1]] = arr
+            poly = np.stack([np.asarray(self.enc.encode(r)) for r in rows])
+        else:
+            poly = self.enc.encode(arr)
         return self._set_d(self.ctx.mul_plain(a, poly), self._d(a) + 1)
 
     def add_plain(self, a, vec):
-        self.stats.add += self._count(a)
+        self._charge("add", a)
         poly = self.enc.encode(np.asarray(vec, dtype=np.int64) % self.t)
         return self._set_d(self.ctx.add_plain(a, poly), self._d(a))
 
     def mul_scalar(self, a, c: int):
-        self.stats.mul_scalar += self._count(a)
+        self._charge("mul_scalar", a)
         return self._set_d(self.ctx.mul_scalar(a, c), self._d(a))
 
     def add_scalar(self, a, c: int):
-        self.stats.add += self._count(a)
+        self._charge("add", a)
         return self._set_d(self.ctx.add_scalar(a, c), self._d(a))
 
     def sub_from_scalar(self, c: int, a):
-        self.stats.add += self._count(a)
+        self._charge("add", a)
         return self._set_d(self.ctx.sub_from_scalar(c, a), self._d(a))
 
     def dot_plain(self, cts: list, coeffs) -> Ciphertext:
@@ -314,11 +449,11 @@ class BFVBackend(_BackendBase):
     # -- data movement ---------------------------------------------------
     def rotate(self, a, step: int):
         """Rotate rows (2 x n/2 layout) left by step."""
-        self.stats.rotate += bin(step % (self.slots // 2)).count("1") * self._count(a)
+        self._charge("rotate", a, mult=bin(step % (self.slots // 2)).count("1"))
         return self._set_d(self.ctx.rotate_rows(a, step, self.keys.gks), self._d(a))
 
     def swap_rows(self, a):
-        self.stats.rotate += self._count(a)
+        self._charge("rotate", a)
         return self._set_d(self.ctx.swap_rows(a, self.keys.gks), self._d(a))
 
 
@@ -329,8 +464,9 @@ class BFVBackend(_BackendBase):
 @dataclasses.dataclass
 class MockCipher:
     vec: np.ndarray          # (slots,) — or (nblocks, slots) for a batch
-    noise: float             # analytic log2 |invariant noise|
+    noise: "float | np.ndarray"   # log2 |invariant noise|, per-block if array
     depth: int = 0
+    live: int | None = None  # logical blocks when shard-padded (see bfv.py)
 
     def __post_init__(self):
         self.vec = np.asarray(self.vec, dtype=np.int64)
@@ -356,27 +492,65 @@ class MockBackend(_BackendBase):
         self.kernel_reduce = kernel_reduce
 
     def _nblocks(self, ct) -> int:
+        if ct.vec.ndim != 2:
+            return 1
+        return ct.live if ct.live is not None else ct.vec.shape[0]
+
+    def _nblocks_phys(self, ct) -> int:
         return ct.vec.shape[0] if ct.vec.ndim == 2 else 1
+
+    @staticmethod
+    def _live(*cts) -> int | None:
+        """live marker the result of an op inherits (batched operand's)."""
+        for c in cts:
+            if c.vec.ndim == 2 and c.live is not None:
+                return c.live
+        return None
+
+    @staticmethod
+    def _pack_noises(noises: list) -> "float | np.ndarray":
+        vals = [float(v) for v in noises]
+        if all(v == vals[0] for v in vals):
+            return vals[0]
+        return np.asarray(vals, dtype=np.float64)
 
     # -- block batching ---------------------------------------------------
     def stack_blocks(self, blocks: list) -> MockCipher:
         assert all(b.vec.ndim == 1 for b in blocks)
-        return MockCipher(np.stack([b.vec for b in blocks]),
-                          max(b.noise for b in blocks),
-                          max(b.depth for b in blocks))
+        vec = np.stack([b.vec for b in blocks])
+        live = None
+        ctx = self.shard_ctx
+        if ctx is not None and ctx.shards > 1 and len(blocks) > 1:
+            from .sharded import pad_to
+            nphys = pad_to(len(blocks), ctx.shards)
+            if nphys > len(blocks):
+                vec = np.concatenate(
+                    [vec, np.zeros((nphys - len(blocks), self.slots),
+                                   dtype=np.int64)])
+            live = len(blocks)
+        return MockCipher(vec, self._pack_noises([b.noise for b in blocks]),
+                          max(b.depth for b in blocks), live)
 
     def unstack_blocks(self, batch: MockCipher) -> list:
-        return [MockCipher(batch.vec[i].copy(), batch.noise, batch.depth)
-                for i in range(batch.vec.shape[0])]
+        per = batch.noise if np.ndim(batch.noise) else None
+        return [MockCipher(batch.vec[i].copy(),
+                           float(per[i]) if per is not None else batch.noise,
+                           batch.depth)
+                for i in range(self._nblocks(batch))]
 
     def fold_blocks(self, batch: MockCipher) -> MockCipher:
         nb = self._nblocks(batch)
         self.stats.add += max(nb - 1, 0)
         self.stats.launches += 1
-        noise = batch.noise
-        for _ in range(nb - 1):
-            noise = self.model.add(noise, batch.noise)
-        return MockCipher(batch.vec.sum(axis=0) % self.t, noise,
+        if self.shard_ctx is not None:
+            self.shard_ctx.record_fold(nb, self._nblocks_phys(batch))
+        per = batch.noise if np.ndim(batch.noise) else None
+        noise = float(per[0]) if per is not None else batch.noise
+        for i in range(1, nb):
+            noise = self.model.add(
+                noise, float(per[i]) if per is not None else batch.noise)
+        # live lanes only: pads may hold garbage after broadcasted ops
+        return MockCipher(batch.vec[:nb].sum(axis=0) % self.t, noise,
                           self._track_depth(batch.depth))
 
     # -- io ----------------------------------------------------------------
@@ -389,78 +563,98 @@ class MockBackend(_BackendBase):
 
     def decrypt(self, ct: MockCipher) -> np.ndarray:
         self.stats.decrypt += self._nblocks(ct)
+        if ct.vec.ndim == 2:
+            return ct.vec[: self._nblocks(ct)].copy()
         return ct.vec.copy()
 
     def refresh(self, ct: MockCipher) -> MockCipher:
-        return MockCipher(ct.vec.copy(), self.model.fresh(), 0)
+        return MockCipher(ct.vec.copy(), self.model.fresh(), 0, ct.live)
 
-    def refresh_inplace(self, ct: MockCipher) -> None:
+    def refresh_inplace(self, ct: MockCipher, lanes: list | None = None) -> None:
+        if lanes is not None and np.ndim(ct.noise):
+            per = np.asarray(ct.noise, dtype=np.float64).copy()
+            per[lanes] = self.model.fresh()
+            ct.noise = self._pack_noises(list(per))
+            return  # depth unchanged: un-refreshed lanes keep history
         ct.noise = self.model.fresh()
         ct.depth = 0
 
     def budget(self, ct: MockCipher) -> float:
-        return self.model.budget(ct.noise)
+        return float(np.min(self.model.budget(ct.noise)))
 
     def depth(self, ct: MockCipher) -> int:
         return ct.depth
 
     # -- ring ops ------------------------------------------------------------
     def add(self, a, b):
-        self.stats.add += self._count(a, b)
+        self._charge("add", a, b)
         return MockCipher((a.vec + b.vec) % self.t,
                           self.model.add(a.noise, b.noise),
-                          self._track_depth(max(a.depth, b.depth)))
+                          self._track_depth(max(a.depth, b.depth)),
+                          self._live(a, b))
 
     def sub(self, a, b):
-        self.stats.add += self._count(a, b)
+        self._charge("add", a, b)
         return MockCipher((a.vec - b.vec) % self.t,
                           self.model.add(a.noise, b.noise),
-                          self._track_depth(max(a.depth, b.depth)))
+                          self._track_depth(max(a.depth, b.depth)),
+                          self._live(a, b))
 
     def neg(self, a):
-        return MockCipher((-a.vec) % self.t, a.noise, a.depth)
+        return MockCipher((-a.vec) % self.t, a.noise, a.depth, self._live(a))
 
     def mul(self, a, b):
         post = self.model.keyswitch(self.model.mul(a.noise, b.noise))
-        if self._budget(post) <= 0:
+        if np.any(np.asarray(self._budget(post)) <= 0):
             a = self._maybe_refresh(a, post, "mul")
             b = self._maybe_refresh(
                 b, self.model.keyswitch(self.model.mul(a.noise, b.noise)), "mul")
-        self.stats.mul += self._count(a, b)
+        self._charge("mul", a, b)
         return MockCipher((a.vec * b.vec) % self.t,
                           self.model.keyswitch(self.model.mul(a.noise, b.noise)),
-                          self._track_depth(max(a.depth, b.depth) + 1))
+                          self._track_depth(max(a.depth, b.depth) + 1),
+                          self._live(a, b))
 
     def mul_plain(self, a, vec):
         a = self._maybe_refresh(a, self.model.mul_plain(a.noise), "mul_plain")
-        self.stats.mul_plain += self._count(a)
-        v = np.zeros(self.slots, dtype=np.int64)
+        self._charge("mul_plain", a)
         arr = np.asarray(vec, dtype=np.int64) % self.t
-        v[: len(arr)] = arr
+        if arr.ndim == 2:
+            # per-block plaintexts against a batch (fused broadcast_slot):
+            # zero rows cover any shard padding lanes
+            v = np.zeros((self._nblocks_phys(a), self.slots), dtype=np.int64)
+            v[: arr.shape[0], : arr.shape[1]] = arr
+        else:
+            v = np.zeros(self.slots, dtype=np.int64)
+            v[: len(arr)] = arr
         return MockCipher((a.vec * v) % self.t, self.model.mul_plain(a.noise),
-                          self._track_depth(a.depth + 1))
+                          self._track_depth(a.depth + 1), self._live(a))
 
     def add_plain(self, a, vec):
-        self.stats.add += self._count(a)
+        self._charge("add", a)
         v = np.zeros(self.slots, dtype=np.int64)
         arr = np.asarray(vec, dtype=np.int64) % self.t
         v[: len(arr)] = arr
-        return MockCipher((a.vec + v) % self.t, self.model.add(a.noise, a.noise), a.depth)
+        return MockCipher((a.vec + v) % self.t, self.model.add(a.noise, a.noise),
+                          a.depth, self._live(a))
 
     def mul_scalar(self, a, c: int):
-        self.stats.mul_scalar += self._count(a)
+        self._charge("mul_scalar", a)
         return MockCipher((a.vec * (c % self.t)) % self.t,
-                          self.model.mul_scalar(a.noise, c), a.depth)
+                          self.model.mul_scalar(a.noise, c), a.depth,
+                          self._live(a))
 
     def add_scalar(self, a, c: int):
-        self.stats.add += self._count(a)
+        self._charge("add", a)
         return MockCipher((a.vec + c) % self.t,
-                          self.model.add(a.noise, a.noise), a.depth)
+                          self.model.add(a.noise, a.noise), a.depth,
+                          self._live(a))
 
     def sub_from_scalar(self, c: int, a):
-        self.stats.add += self._count(a)
+        self._charge("add", a)
         return MockCipher((c - a.vec) % self.t,
-                          self.model.add(a.noise, a.noise), a.depth)
+                          self.model.add(a.noise, a.noise), a.depth,
+                          self._live(a))
 
     def dot_plain(self, cts: list, coeffs) -> MockCipher:
         """Vectorized sum_i coeffs[i]*cts[i]; charged as the equivalent
@@ -468,9 +662,13 @@ class MockBackend(_BackendBase):
         cs = np.asarray(coeffs, dtype=np.int64) % self.t
         nz = [i for i in range(len(cts)) if cs[i] != 0]
         assert nz, "all-zero dot"
-        nb = self._count(*[cts[i] for i in nz])
-        self.stats.mul_scalar += len(nz) * nb
-        self.stats.add += max(0, len(nz) - 1) * nb
+        used = [cts[i] for i in nz]
+        nb = self._count(*used)
+        phys = max(self._nblocks_phys(c) for c in used)
+        dist = any(self._nblocks_phys(c) > 1 for c in used)
+        self._charge_units("mul_scalar", len(nz) * nb, len(nz) * phys, dist)
+        self._charge_units("add", max(0, len(nz) - 1) * nb,
+                           max(0, len(nz) - 1) * phys, dist)
         out = None
         for i in nz:                       # products < 2^34, running sums
             term = cts[i].vec * cs[i]      # < 2^34 * 2^15 — exact int64
@@ -478,22 +676,23 @@ class MockBackend(_BackendBase):
         out = out % self.t
         noises = [self.model.mul_scalar(cts[i].noise, int(cs[i])) for i in nz]
         depth = max(cts[i].depth for i in nz)
-        return MockCipher(out, self.model.add_many(noises), self._track_depth(depth))
+        return MockCipher(out, self.model.add_many(noises),
+                          self._track_depth(depth), self._live(*used))
 
     # -- data movement ---------------------------------------------------
     def rotate(self, a, step: int):
         """Row-rotation semantics matching the BFV 2 x n/2 slot layout."""
-        self.stats.rotate += bin(step % (self.slots // 2)).count("1") * self._count(a)
+        self._charge("rotate", a, mult=bin(step % (self.slots // 2)).count("1"))
         half = self.slots // 2
         vec = np.concatenate([np.roll(a.vec[..., :half], -step, axis=-1),
                               np.roll(a.vec[..., half:], -step, axis=-1)], axis=-1)
-        return MockCipher(vec, self.model.rotate(a.noise), a.depth)
+        return MockCipher(vec, self.model.rotate(a.noise), a.depth, self._live(a))
 
     def swap_rows(self, a):
-        self.stats.rotate += self._count(a)
+        self._charge("rotate", a)
         half = self.slots // 2
         vec = np.concatenate([a.vec[..., half:], a.vec[..., :half]], axis=-1)
-        return MockCipher(vec, self.model.rotate(a.noise), a.depth)
+        return MockCipher(vec, self.model.rotate(a.noise), a.depth, self._live(a))
 
     def sum_slots(self, a):
         if not self.kernel_reduce:
@@ -505,8 +704,10 @@ class MockBackend(_BackendBase):
         half = self.slots // 2
         steps = int(math.log2(half)) + 1            # log rotations + row swap
         nb = self._nblocks(a)
-        self.stats.add += steps * nb
-        self.stats.rotate += steps * nb
+        phys = self._nblocks_phys(a)
+        dist = phys > 1
+        self._charge_units("add", steps * nb, steps * phys, dist)
+        self._charge_units("rotate", steps * nb, steps * phys, dist)
         self.stats.launches += 1
         noise = a.noise
         for _ in range(steps):
@@ -516,7 +717,7 @@ class MockBackend(_BackendBase):
         red = red.reshape(-1, 2, half)
         total = (red[:, 0] + red[:, 1]) % self.t    # (nb, half) full sums
         vec = np.concatenate([total, total], axis=-1).reshape(a.vec.shape)
-        return MockCipher(vec, noise, self._track_depth(a.depth))
+        return MockCipher(vec, noise, self._track_depth(a.depth), self._live(a))
 
 
 Backend = Any  # duck type: BFVBackend | MockBackend

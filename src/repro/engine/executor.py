@@ -159,8 +159,13 @@ class Executor:
         start = bk.stats.clone()
         prior_max = bk.stats.max_depth
         bk.stats.max_depth = 0
+        from .sharded import activate
         try:
-            out = self._execute(cq, warm)
+            # Sharded scan execution: with a planner shard context every
+            # stacked column launched below pads/places its block lanes
+            # over the mesh data axis (no-op when shard_ctx is None).
+            with activate(bk, getattr(pl, "shard_ctx", None)):
+                out = self._execute(cq, warm)
         finally:
             end = bk.stats.clone()
             self.report.measured_depth = bk.stats.max_depth
@@ -382,7 +387,20 @@ class Executor:
         return out
 
 
-def run_via_plan(planner, plan: QueryPlan, validate: bool = True) -> dict:
+def run_via_plan(planner, plan: QueryPlan, validate: bool = True,
+                 shards: int | None = None) -> dict:
     """Execute a QueryPlan through the compiled operator DAG.  Returns
-    the same decrypted result structure as the legacy `run_qN` body."""
-    return Executor(planner).run(plan, validate=validate)
+    the same decrypted result structure as the legacy `run_qN` body.
+
+    `shards=N` runs this plan's scan phase sharded over N mesh data
+    lanes (engine/sharded.py) without mutating the planner's default:
+    the context is installed for this call only."""
+    if shards is None:
+        return Executor(planner).run(plan, validate=validate)
+    from .sharded import make_shard_context
+    prev = getattr(planner, "shard_ctx", None)
+    planner.shard_ctx = make_shard_context(shards)
+    try:
+        return Executor(planner).run(plan, validate=validate)
+    finally:
+        planner.shard_ctx = prev

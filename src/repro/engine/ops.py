@@ -407,19 +407,39 @@ def translate_values_down(bk, packed_values, fact_table: EncryptedTable,
     return _translate_down(bk, packed_values, fact_table.col(fk).blocks, nparent)
 
 
+def broadcast_slots(bk, packed, idxs) -> list:
+    """Fused broadcast_slot: extract+replicate many slots of one packed
+    ciphertext in a single stacked launch.
+
+    The per-slot loop (`bk.broadcast_slot` per key) pays one mul_plain
+    plus a full log2(n) rotate-add reduction *per key* — it dominated
+    translate launch counts.  Stacking nparent copies of `packed`
+    against an (nparent, slots) one-hot basis matrix runs the same ops
+    on every lane of one batch: identical per-block op counts, noise
+    and depth, ~nparent x fewer launches."""
+    idxs = list(idxs)
+    if len(idxs) == 1:
+        return [bk.broadcast_slot(packed, int(idxs[0]))]
+    basis = np.zeros((len(idxs), bk.slots), dtype=np.int64)
+    basis[np.arange(len(idxs)), np.asarray(idxs, dtype=np.int64)] = 1
+    batch = bk.stack_blocks([packed] * len(idxs))
+    return bk.unstack_blocks(bk.sum_slots(bk.mul_plain(batch, basis)))
+
+
 def _translate_down(bk, packed, fact_blocks: list, nparent: int,
                     per_key: list | None = None) -> list:
     """Shared FK scatter: sum_j EQ(fk, j+1) x broadcast(packed, j).
     The nparent per-key EQ circuits run in one fused launch (or arrive
-    pre-evaluated from the workload cache's fk bank)."""
+    pre-evaluated from the workload cache's fk bank), and the nparent
+    slot broadcasts of `packed` fuse into one stacked launch too."""
     batched = len(fact_blocks) > 1
     if per_key is None:
         per_key = _per_key_eq(bk, fact_blocks, nparent)
+    pjs = broadcast_slots(bk, packed, range(nparent))  # encrypted bits/values
     out = None
     for j in range(nparent):
-        pj = bk.broadcast_slot(packed, j)         # encrypted bit / value
         e = bk.stack_blocks(per_key[j]) if batched else per_key[j][0]
-        term = bk.mul(e, pj)
+        term = bk.mul(e, pjs[j])
         out = term if out is None else bk.add(out, term)
     return _unstacked(bk, out, batched)
 

@@ -221,9 +221,12 @@ class AtomEvaluator:
     `fuse=True` stacks every pending atom of one circuit kind into a
     single batched call (cross-mask batching); `fuse=False` evaluates
     atom-at-a-time (each still column-batched over its own blocks).
+    `shard_ctx` (engine/sharded.py) shards the stacked launches over the
+    mesh data axis: flush() activates it on the backend so every fused
+    circuit batch pads/places its lanes across the shards.
     """
 
-    def __init__(self, db, bk, cache=None, fuse: bool = True):
+    def __init__(self, db, bk, cache=None, fuse: bool = True, shard_ctx=None):
         from .workload import WorkloadCache
         self.db = db
         self.bk = bk
@@ -231,6 +234,7 @@ class AtomEvaluator:
         # CSE within this evaluator only, nothing outlives it.
         self.cache = cache if cache is not None else WorkloadCache()
         self.fuse = fuse
+        self.shard_ctx = shard_ctx
         self._pending: dict[str, list] = {"eq": [], "lt": []}
 
     # ------------------------------------------------------------- intake
@@ -272,7 +276,16 @@ class AtomEvaluator:
     def flush(self) -> None:
         """Run every pending circuit.  With fusion, all atoms of a kind
         share ONE stacked launch; op_log still charges one logical eq/cmp
-        per atom so the baseline cost models see identical counts."""
+        per atom so the baseline cost models see identical counts.
+        Under a shard context the stacked launch is padded/placed over
+        the mesh data axis (activation is reentrant, so flushes nested
+        inside an already-activated executor run are no-ops here)."""
+        bk = self.bk
+        from .sharded import activate
+        with activate(bk, self.shard_ctx):
+            self._flush_inner()
+
+    def _flush_inner(self) -> None:
         bk = self.bk
         for kind, atoms in self._pending.items():
             if not atoms:

@@ -76,12 +76,22 @@ class PlanReport:
 
 
 class Planner:
-    def __init__(self, db: Database, optimized: bool = True, cache=None):
+    def __init__(self, db: Database, optimized: bool = True, cache=None,
+                 shards: int | None = None, mesh="auto"):
         from .workload import WorkloadCache
         self.db = db
         self.bk = db.bk
         self.optimized = optimized
         self.budget_levels = noise_budget_levels(self.bk)
+        # Sharded scan execution (DESIGN §4): shards=N partitions every
+        # stacked block column over the mesh "data" axis.  The executor
+        # and evaluator activate this context around execution; None
+        # keeps the classic single-device path.
+        if shards is not None and shards >= 1:
+            from .sharded import make_shard_context
+            self.shard_ctx = make_shard_context(shards, mesh)
+        else:
+            self.shard_ctx = None
         # Noise-aware mask store shared by every compiled mask: WHERE
         # predicates, group-by EQ enumerations, aux/join masks and sort
         # passes all read and write the same subgraph store through
@@ -102,7 +112,7 @@ class Planner:
         from .physical import AtomEvaluator
         return AtomEvaluator(self.db, self.bk,
                              self.mask_cache if self.share_masks else None,
-                             fuse=self.fuse_masks)
+                             fuse=self.fuse_masks, shard_ctx=self.shard_ctx)
 
     def translate_levels(self, downstream_muls: int) -> int:
         """Planned-refresh sizing for a mask about to cross an FK hop —
@@ -132,12 +142,14 @@ class Planner:
         if not self.optimized:
             return self._mask_seq(table, expr)
         from .physical import annotate_downstream, compile_mask, run_mask_node
+        from .sharded import activate
         node = compile_mask(self.db, table, expr)
         annotate_downstream(node, 1)     # R3: one injection at the aggregate
         ev = self.evaluator()
-        ev.request_tree(node)
-        ev.flush()
-        return run_mask_node(node, ev, self)
+        with activate(self.bk, self.shard_ctx):
+            ev.request_tree(node)
+            ev.flush()
+            return run_mask_node(node, ev, self)
 
     def _mask_seq(self, table, expr) -> list:
         """Unoptimized: classical pipeline semantics.  Conjunctions chain

@@ -1,0 +1,173 @@
+"""Sharded scan execution over ciphertext blocks (DESIGN §4).
+
+Scan-first execution is embarrassingly parallel across ciphertext
+blocks: a stacked column is a `(nblocks, 2, k, n)` batch, and every
+mask-evaluation / combination / plaintext-mul step is block-local.
+This module makes that parallelism explicit:
+
+* `ShardContext` — the per-run distribution plan.  It carries the shard
+  count, an optional real `("data",)` mesh (launch/mesh.py:
+  make_scan_mesh), and a cost ledger that splits every charged op into
+  *distributed* units (lanes of a multi-block batch — these divide by
+  the shard count) vs *replicated* units (singleton ciphertexts and
+  post-fold reductions — these run on every shard or on one) plus the
+  psum-style fold collectives.  `modeled_seconds(costs)` prices the
+  ledger with measured per-op costs, which is how
+  `benchmarks/sharded_scan.py` produces SF=1.0 scaling curves on the
+  mock backend.
+
+* `activate(bk, ctx)` — installs the context on a backend for the
+  duration of an execution.  While active, `stack_blocks` pads the lane
+  count up to a multiple of `ctx.shards` with zero blocks (uneven
+  tables compile to one even launch; `CiphertextBatch.live` records the
+  logical count so fold/unstack/decrypt ignore the pads), batches are
+  device_put with a `("data", ...)` NamedSharding when a real mesh is
+  present, and every `OpStats` charge is mirrored into the ledger.
+
+* `sharded_fold(data, live, mesh)` — the one step that genuinely needs
+  a collective: the block-fold reduction runs shard-local over each
+  shard's lanes and combines partial sums with `jax.lax.psum` over
+  "data".  Pad lanes are excluded with a 0/1 lane-weight vector so the
+  whole thing stays a single launch.  The shard_map body runs under
+  `limbops.force_ref()` because Pallas interpret mode cannot trace
+  inside a shard_map region.
+
+Parity contract: padding lanes are exact additive identities for the
+fold and are never decrypted, `_count`/`_nblocks` keep returning *live*
+lane counts, and noise accounting never sees the pads — so OpStats,
+noise trajectories, refresh schedules and decrypted outputs are
+byte-identical to the single-device path (tests/test_sharded_exec.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+
+from ..core import limbops
+from ..launch.mesh import make_scan_mesh
+from ..runtime.elastic import elastic_scan_plan
+
+
+def pad_to(nblocks: int, shards: int) -> int:
+    """Lane count after padding nblocks up to a multiple of shards."""
+    if shards <= 1 or nblocks <= 1:
+        return nblocks
+    return nblocks + (-nblocks) % shards
+
+
+class ShardContext:
+    """Distribution plan + cost ledger for one sharded execution."""
+
+    def __init__(self, shards: int, mesh=None):
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        self.shards = int(shards)
+        self.mesh = mesh
+        # op -> units that run data-parallel over the shard axis
+        # (physical lanes of multi-block batches, pads included — pads
+        # occupy a device lane even though OpStats never count them).
+        self.dist: dict[str, float] = {}
+        # op -> units with no block axis to shard (singletons, folded
+        # aggregates, refreshes of single blocks) — serial time.
+        self.repl: dict[str, float] = {}
+        self.folds = 0  # cross-shard psum collectives issued
+
+    def record(self, field: str, units: float, distributed: bool) -> None:
+        ledger = self.dist if distributed else self.repl
+        ledger[field] = ledger.get(field, 0) + units
+
+    def record_fold(self, live: int, phys: int) -> None:
+        """A block-fold: shard-local adds + one psum tree combine."""
+        local = max(phys - self.shards, 0) if self.shards > 1 else max(phys - 1, 0)
+        if local:
+            self.dist["add"] = self.dist.get("add", 0) + local
+        self.folds += 1
+
+    def modeled_seconds(self, costs: dict) -> float:
+        """Price the ledger: distributed time divides by the shard
+        count, replicated time and the psum combine tree do not."""
+        dist = sum(n * costs.get(op, 0.0) for op, n in self.dist.items())
+        repl = sum(n * costs.get(op, 0.0) for op, n in self.repl.items())
+        tree = math.ceil(math.log2(self.shards)) if self.shards > 1 else 0
+        coll = self.folds * tree * costs.get("add", 0.0)
+        return dist / self.shards + repl + coll
+
+    def ledger_snapshot(self) -> dict:
+        return {"shards": self.shards, "dist": dict(self.dist),
+                "repl": dict(self.repl), "folds": self.folds,
+                "real_mesh": self.mesh is not None}
+
+    def reshard(self, excluded) -> "ShardContext":
+        """Shrink onto the surviving workers after straggler exclusion."""
+        plan = elastic_scan_plan(self.shards, excluded)
+        return make_shard_context(plan["shards"])
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"ShardContext(shards={self.shards}, "
+                f"mesh={'real' if self.mesh is not None else None}, "
+                f"folds={self.folds})")
+
+
+def make_shard_context(shards: int, mesh="auto") -> ShardContext:
+    """Build a context; 'auto' attaches a real mesh when the host has
+    enough devices (e.g. under XLA_FLAGS=--xla_force_host_platform_
+    device_count=8), else runs logical-only (padding + ledger, single
+    device) so shard plans stay testable on one chip."""
+    if mesh == "auto":
+        mesh = make_scan_mesh(shards) if 1 < shards <= len(jax.devices()) else None
+    return ShardContext(shards, mesh)
+
+
+@contextlib.contextmanager
+def activate(bk, ctx: ShardContext | None):
+    """Install ctx as bk.shard_ctx for the duration.  Reentrant: if the
+    same context is already active this is a no-op, so nested scopes
+    (executor -> evaluator flush) do not double-install."""
+    prev = getattr(bk, "shard_ctx", None)
+    if ctx is None or prev is ctx:
+        yield prev
+        return
+    bk.shard_ctx = ctx
+    try:
+        yield ctx
+    finally:
+        bk.shard_ctx = prev
+
+
+def batch_sharding(mesh):
+    """NamedSharding placing the leading block axis on "data"."""
+    spec = jax.sharding.PartitionSpec("data", None, None, None)
+    return jax.sharding.NamedSharding(mesh, spec)
+
+
+def place_batch(data, mesh):
+    """device_put a (nblocks, 2, k, n) batch across the scan mesh."""
+    return jax.device_put(data, batch_sharding(mesh))
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def _fold_psum(data, weights, *, mesh):
+    P = jax.sharding.PartitionSpec
+
+    def body(d, w):
+        local = jnp.sum(d * w[:, None, None, None], axis=0)
+        return jax.lax.psum(local, "data")
+
+    return shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")),
+                     out_specs=P())(data, weights)
+
+
+def sharded_fold(data, live: int, mesh):
+    """Fold a padded (nphys, 2, k, n) batch: shard-local weighted sum,
+    then psum over the "data" axis.  Returns the raw (2, k, n) sum —
+    the caller reduces mod q (residues are < 2^30, so even ~190 int64
+    partial sums cannot overflow before the reduction)."""
+    nphys = data.shape[0]
+    weights = (jnp.arange(nphys) < live).astype(data.dtype)
+    with limbops.force_ref():
+        return _fold_psum(data, weights, mesh=mesh)

@@ -63,6 +63,7 @@ class CacheStats:
     invalidations: int = 0        # entries dropped by table re-loads
     fk_hits: int = 0              # per-key join EQ bank reuses
     fk_misses: int = 0            # per-key join EQ banks built
+    evictions: int = 0            # entries dropped by the LRU bound
 
     def clone(self) -> "CacheStats":
         return dataclasses.replace(self)
@@ -99,9 +100,15 @@ class WorkloadCache:
     admission reads `bk.levels_left` at serve time, never a snapshot.
     """
 
-    def __init__(self, policy: str = "refresh"):
+    def __init__(self, policy: str = "refresh", max_entries: int | None = None):
         assert policy in ("refresh", "rederive"), policy
+        assert max_entries is None or max_entries > 0, max_entries
         self.policy = policy
+        # LRU bound, applied independently to the atom store and the FK
+        # bank store.  None = unbounded (the historical behaviour).  A
+        # hit moves its entry to the MRU end; insertion past the bound
+        # pops the LRU end and counts it in `stats.evictions`.
+        self.max_entries = max_entries
         self.entries: dict[tuple, CacheEntry] = {}
         self.fk_banks: dict[tuple, CacheEntry] = {}
         self.stats = CacheStats()
@@ -165,11 +172,23 @@ class WorkloadCache:
         have = min(bk.levels_left(b) for b in e.blocks)
         return have >= min(need_levels, e.born_levels)
 
+    def _touch(self, store: dict, key) -> None:
+        """Move `key` to the MRU end of the insertion-ordered store."""
+        store[key] = store.pop(key)
+
+    def _evict(self, store: dict) -> None:
+        if self.max_entries is None:
+            return
+        while len(store) > self.max_entries:
+            store.pop(next(iter(store)))       # LRU = oldest-ordered key
+            self.stats.evictions += 1
+
     def insert(self, bk, atom, blocks: list) -> None:
         self.entries[atom.key] = CacheEntry(
             blocks, atom.table,
             min(bk.levels_left(b) for b in blocks), self._run)
         self.stats.misses += 1
+        self._evict(self.entries)
 
     def serve(self, bk, atom, need_levels: int):
         """Noise-aware admission (the fix for the noise-unaware CSE hit).
@@ -201,6 +220,7 @@ class WorkloadCache:
             self.stats.hits += 1
         else:
             self.stats.intra_hits += 1
+        self._touch(self.entries, atom.key)
         return e.blocks
 
     # ----------------------------------------------- per-key join EQ banks
@@ -216,6 +236,7 @@ class WorkloadCache:
             self.stats.rederives += 1
             return None
         self.stats.fk_hits += 1
+        self._touch(self.fk_banks, (table, fk, nparent))
         return e.blocks
 
     def fk_store(self, bk, table: str, fk: str, nparent: int, bank: list) -> None:
@@ -223,6 +244,7 @@ class WorkloadCache:
         self.fk_banks[(table, fk, nparent)] = CacheEntry(
             bank, table, min(bk.levels_left(b) for b in flat), self._run)
         self.stats.fk_misses += 1
+        self._evict(self.fk_banks)
 
 
 # ---------------------------------------------------------------------------

@@ -7,6 +7,7 @@ must set XLA_FLAGS before the first jax initialization.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,3 +21,19 @@ def make_host_mesh():
     """Whatever this host actually has — smoke tests and examples."""
     n = len(jax.devices())
     return jax.make_mesh((n,), ("data",))
+
+
+def make_scan_mesh(shards: int):
+    """1-D ("data",) mesh over the first `shards` devices.
+
+    The sharded scan executor (engine/sharded.py) partitions stacked
+    ciphertext-block columns over this axis; unlike make_host_mesh it
+    takes an explicit shard count so elastic re-planning
+    (runtime/elastic.py:elastic_scan_plan) can shrink the mesh after a
+    straggler exclusion without restarting the process.
+    """
+    devs = jax.devices()
+    if shards > len(devs):
+        raise ValueError(f"requested {shards} shards but only "
+                         f"{len(devs)} devices are visible")
+    return jax.sharding.Mesh(np.array(devs[:shards]), ("data",))

@@ -76,3 +76,22 @@ def elastic_mesh_plan(total_devices: int, excluded: int,
     return {"mesh_shape": (d, model_parallel), "axes": ("data", "model"),
             "devices_used": used, "devices_idle": alive - used,
             "global_batch_scale": d}
+
+
+def elastic_scan_plan(shards: int, excluded) -> dict:
+    """Re-shard plan for the 1-D sharded scan mesh after exclusions.
+
+    The scan path shards ciphertext blocks over a pure data axis, so
+    unlike elastic_mesh_plan there is no TP constraint — any surviving
+    power-of-two worker count is viable (power of two keeps the padded
+    nblocks divisibility stable across re-shards).
+    """
+    dropped = set(excluded)
+    alive = [w for w in range(shards) if w not in dropped]
+    if not alive:
+        raise RuntimeError("all scan shard workers excluded")
+    d = 1
+    while d * 2 <= len(alive):
+        d *= 2
+    return {"shards": d, "workers": alive[:d], "axes": ("data",),
+            "workers_idle": len(alive) - d, "excluded": sorted(dropped)}
