@@ -16,9 +16,9 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma-separated module names")
     args = ap.parse_args()
 
-    from . import (depth_model, mask_fusion, packing_scaling, primitive_ops,
-                   q6_breakdown, roofline, sharded_scan, storage,
-                   tpch_queries, workload_cache)
+    from . import (depth_model, fault_recovery, mask_fusion, packing_scaling,
+                   primitive_ops, q6_breakdown, roofline, sharded_scan,
+                   storage, tpch_queries, workload_cache)
     mods = {
         "depth_model": depth_model,
         "primitive_ops": primitive_ops,
@@ -29,6 +29,7 @@ def main() -> None:
         "workload_cache": workload_cache,
         "sharded_scan": sharded_scan,
         "tpch_queries": tpch_queries,
+        "fault_recovery": fault_recovery,
         "roofline": roofline,
     }
     if args.only:

@@ -187,3 +187,48 @@ class NoiseModel:
 
     def join_depth(self) -> int:
         return self.eq_depth() + 1
+
+
+class UnderReportingNoiseModel:
+    """Delegating NoiseModel wrapper that *under-reports* ct-ct multiply
+    noise growth — the fault-injection stand-in for a mis-calibrated
+    model (runtime/faults.py, DESIGN.md §9 'overflow').
+
+    On each tampered `mul` the reported noise is `extra_bits` lower than
+    the inner model's answer, and the shortfall accumulates in
+    `hidden_bits`.  The engine's refresh policy then under-provisions:
+    ciphertexts reach decrypt with less real headroom than their
+    tracked noise claims.  The decrypt-boundary guard
+    (`faults.check_decrypt`) subtracts `hidden_bits` to detect exactly
+    this — the injected equivalent of a real backend's noise exceeding
+    the analytic bound.
+
+    `skip` passes through the first N mul calls untouched (placing the
+    fault mid-plan); `take()` is consulted per call so the armed
+    FaultPlan can bound how many tampered muls fire across retries.
+    Every other model method (budget, keyswitch, levels_left, ...)
+    delegates verbatim, so planning and refresh sizing stay coherent
+    with the lie — the scenario is a consistent model bias, not a
+    one-off glitch the accounting would immediately expose.
+    """
+
+    def __init__(self, inner: NoiseModel, extra_bits: float,
+                 skip: int = 0, take=None):
+        self.inner = inner
+        self.extra_bits = float(extra_bits)
+        self._skip = int(skip)
+        self._take = take if take is not None else (lambda: True)
+        self.hidden_bits = 0.0
+
+    def mul(self, v1, v2):
+        out = self.inner.mul(v1, v2)
+        if self._skip > 0:
+            self._skip -= 1
+            return out
+        if not self._take():
+            return out
+        self.hidden_bits += self.extra_bits
+        return out - self.extra_bits
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)

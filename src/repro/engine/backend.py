@@ -52,6 +52,7 @@ from typing import Any
 import numpy as np
 
 from ..core.bfv import BFVContext, Ciphertext, CiphertextBatch, Keys
+from ..runtime import faults
 from ..core.encoder import BatchEncoder
 from ..core.noise import NoiseModel, NoiseProfile, paper_profile
 from ..core.params import HEParams
@@ -185,6 +186,14 @@ class _BackendBase:
         self.stats.max_depth = max(self.stats.max_depth, d)
         return d
 
+    def fingerprint(self, ct) -> int | None:
+        """Content hash of a ciphertext handle for at-rest integrity
+        checks (WorkloadCache poison detection), or None when handles
+        are opaque.  Real BFV returns None: `refresh_inplace`
+        re-encrypts the payload under fresh randomness, so no stable
+        content hash can survive legitimate noise maintenance."""
+        return None
+
     def levels_left(self, ct) -> int:
         noise = ct.noise if hasattr(ct, "noise") else ct
         return self.model.levels_left(noise)
@@ -299,6 +308,7 @@ class BFVBackend(_BackendBase):
         Charges the same nblocks-1 adds as the sequential fold.  With a
         real scan mesh attached the reduction runs shard-local and
         combines partials with a psum collective (engine/sharded.py)."""
+        faults.maybe_device_loss("fold")
         ctx = self.shard_ctx
         self.stats.add += max(batch.nblocks - 1, 0)
         self.stats.launches += 1
@@ -539,6 +549,7 @@ class MockBackend(_BackendBase):
                 for i in range(self._nblocks(batch))]
 
     def fold_blocks(self, batch: MockCipher) -> MockCipher:
+        faults.maybe_device_loss("fold")
         nb = self._nblocks(batch)
         self.stats.add += max(nb - 1, 0)
         self.stats.launches += 1
@@ -584,6 +595,12 @@ class MockBackend(_BackendBase):
 
     def depth(self, ct: MockCipher) -> int:
         return ct.depth
+
+    def fingerprint(self, ct: MockCipher) -> int:
+        """Mock handles expose stable content: every op builds a new
+        MockCipher and `refresh_inplace` rewrites only noise/depth, so
+        the vec hash changes iff the payload was tampered with."""
+        return faults.crc_array(ct.vec)
 
     # -- ring ops ------------------------------------------------------------
     def add(self, a, b):

@@ -20,12 +20,27 @@ depth must stay within a small constant of the Table-3 prediction, and
 refresh events may only occur when the model predicted bootstraps.  The
 legacy `run_qN` bodies in engine/queries.py are kept verbatim as parity
 oracles — `run_via_plan` must reproduce their decrypted output exactly.
+
+Fault tolerance (DESIGN.md §9): execution is staged through a
+`StageCheckpoint` — materialized mask blocks are recorded at every DAG
+stage boundary (atoms / where / aux / gmasks), so a `DeviceLossFault`
+resumes from the last completed stage on a re-sharded mesh
+(`ShardContext.reshard` via `elastic_scan_plan`) instead of from
+scratch.  With guards armed (an injected FaultPlan, or
+`Planner(guards=True)`), every decrypt boundary runs the headroom check
+of runtime/faults.py plus a plaintext sentinel lane, and a
+`NoiseOverflowFault` triggers bounded recovery: refresh the
+checkpointed masks and retry, then re-derive from base columns, then
+fail typed.  A recovered run never validates against the plan model —
+its op history spans partial attempts — but must still decrypt
+byte-identical to the fault-free run.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 
+from ..runtime import faults
 from . import ops
 from .physical import (CmpAtom, annotate_downstream, compile_mask,
                        run_mask_node)
@@ -36,6 +51,13 @@ from .plan import And, Pred, QueryPlan
 # plaintext-multiply steps (validity, broadcasts) and BSGS slack.
 DEPTH_SLACK_OVER = 3      # measured may exceed predicted by at most this
 DEPTH_SLACK_UNDER = 7     # optimized predictions may overshoot by this
+
+# Bounded recovery (DESIGN §9): one refresh-and-retry, one re-derive
+# from base columns, then a typed NoiseOverflowFault.
+MAX_OVERFLOW_RETRIES = 2
+# Device-loss resumes halve the mesh each time; a handful of attempts
+# exhausts any realistic shard count before this trips.
+MAX_DEVICE_LOSS_RECOVERIES = 4
 
 
 @dataclasses.dataclass
@@ -60,6 +82,12 @@ class ExecReport:
     cache_hits: int = 0
     cache_admit_refreshes: int = 0
     history: list = dataclasses.field(default_factory=list)
+    # Recovery events this execution survived (overflow retries, device
+    # -loss resumes, straggler exclusions) — see DESIGN §9.  A run that
+    # recovered from overflow/device-loss executed partial attempts, so
+    # plan-model validation is skipped for it; the typed-or-identical
+    # contract is asserted by the chaos suite instead.
+    recoveries: list = dataclasses.field(default_factory=list)
 
     def record(self, label: str, before, after) -> None:
         self.history.append({
@@ -72,6 +100,34 @@ class ExecReport:
             "max_depth": after.max_depth,
         })
 
+    def op_history_diff(self) -> str:
+        """Expected-vs-observed accounting plus the per-stage history
+        table — appended to every validate() assertion so a chaos-test
+        failure is diagnosable from the message alone."""
+        unplanned = self.refreshes - self.cache_admit_refreshes
+        lines = [
+            f"op-history diff for {self.name} "
+            f"(optimized={self.optimized}):",
+            f"  depth     predicted={self.predicted_depth} "
+            f"measured={self.measured_depth} budget={self.budget_levels} "
+            f"slack=+{DEPTH_SLACK_OVER}/-{DEPTH_SLACK_UNDER}",
+            f"  refreshes predicted={self.predicted_refreshes} "
+            f"observed={self.refreshes} admit={self.cache_admit_refreshes} "
+            f"unplanned={unplanned}",
+            f"  launches  {self.launches}  muls {self.muls}  "
+            f"cache_hits {self.cache_hits}",
+            f"  {'stage':<20} {'mul':>6} {'add':>6} {'rot':>6} "
+            f"{'launch':>6} {'refr':>5} {'depth':>5}",
+        ]
+        for h in self.history:
+            lines.append(
+                f"  {h['stage']:<20} {h['mul']:>6} {h['add']:>6} "
+                f"{h['rotate']:>6} {h['launches']:>6} {h['refresh']:>5} "
+                f"{h['max_depth']:>5}")
+        for r in self.recoveries:
+            lines.append(f"  recovery: {r}")
+        return "\n".join(lines)
+
     def validate(self) -> None:
         """Assert the §4.3 noise model against the executed history.
 
@@ -81,25 +137,82 @@ class ExecReport:
         and refreshes charged at cache admission are planned by the
         cache's own i*-style sizing, so the plan-model refresh invariants
         apply to the net (unplanned) count."""
+        if any(r.get("kind") in ("overflow", "device-loss")
+               for r in self.recoveries):
+            # Partial attempts make the op history incomparable to the
+            # single-pass plan model; the recovery contract (identical
+            # result or typed fault) is what holds here.
+            return
+        diff = "\n" + self.op_history_diff()
         assert self.measured_depth <= self.predicted_depth + DEPTH_SLACK_OVER, (
             f"{self.name}: executed depth {self.measured_depth} exceeds "
-            f"predicted {self.predicted_depth} (+{DEPTH_SLACK_OVER})")
+            f"predicted {self.predicted_depth} (+{DEPTH_SLACK_OVER})" + diff)
         unplanned = self.refreshes - self.cache_admit_refreshes
         if self.optimized:
             if self.cache_hits == 0:
                 assert self.predicted_depth <= self.measured_depth + DEPTH_SLACK_UNDER, (
                     f"{self.name}: prediction {self.predicted_depth} overshoots "
-                    f"measured {self.measured_depth} (+{DEPTH_SLACK_UNDER})")
+                    f"measured {self.measured_depth} (+{DEPTH_SLACK_UNDER})"
+                    + diff)
             if self.predicted_refreshes == 0:
                 assert unplanned <= 0, (
                     f"{self.name}: plan predicted refresh-free but executor "
                     f"paid {unplanned} unplanned refreshes "
                     f"({self.refreshes} total, {self.cache_admit_refreshes} "
-                    f"at cache admission)")
+                    f"at cache admission)" + diff)
         if unplanned > 0:
             assert self.predicted_refreshes > 0, (
                 f"{self.name}: {unplanned} unplanned refreshes but the model "
-                f"predicted none")
+                f"predicted none" + diff)
+
+
+@dataclasses.dataclass
+class StageCheckpoint:
+    """Materialized-mask checkpoints at DAG stage boundaries.
+
+    Mid-query recovery state: each completed stage stores its payload
+    (the structure the aggregate consumes) plus the flat ciphertext
+    handles it materialized.  On device loss the executor re-enters
+    `_execute` with the same checkpoint — completed stages return their
+    payload instead of re-running, so only work after the last boundary
+    repeats on the re-sharded mesh.  On noise overflow `refresh_all`
+    rejuvenates every checkpointed block in place (the refresh-and-retry
+    arm) and `clear` drops everything (the re-derive-from-base arm).
+    """
+
+    done: dict = dataclasses.field(default_factory=dict)
+    blocks: dict = dataclasses.field(default_factory=dict)
+    resumes: int = 0
+
+    def has(self, stage: str) -> bool:
+        return stage in self.done
+
+    def get(self, stage: str):
+        return self.done[stage]
+
+    def put(self, stage: str, payload, blocks=()) -> None:
+        self.done[stage] = payload
+        self.blocks[stage] = [b for b in blocks if b is not None]
+
+    def completed(self) -> list:
+        return list(self.done)
+
+    def clear(self) -> None:
+        self.done.clear()
+        self.blocks.clear()
+
+    def refresh_all(self, bk) -> None:
+        """Rejuvenate every checkpointed mask block (client
+        re-encryption under NSHEDB's trust model), charged as refreshes
+        so recovery cost stays visible in OpStats."""
+        seen = set()
+        for blocks in self.blocks.values():
+            for b in blocks:
+                if id(b) in seen:
+                    continue
+                seen.add(id(b))
+                bk._charge_refresh(b, None, "recovery(overflow)")
+                bk.refresh_inplace(b)
 
 
 @dataclasses.dataclass
@@ -133,6 +246,8 @@ class Executor:
         self.db = planner.db
         self.ev = evaluator
         self.report: ExecReport | None = None
+        self._guards = False          # decrypt-boundary guards armed?
+        self._sentinel = None         # plaintext sentinel lane (guarded)
 
     # ------------------------------------------------------------ public
     def run(self, plan: QueryPlan, validate: bool = True) -> dict:
@@ -159,13 +274,42 @@ class Executor:
         start = bk.stats.clone()
         prior_max = bk.stats.max_depth
         bk.stats.max_depth = 0
+        # Guards are armed by an injected FaultPlan or Planner(guards=
+        # True).  The sentinel lane only makes sense where the plan
+        # promises refresh-free depth (optimized): it replays the run's
+        # observed depth on a known plaintext with auto-refresh off.
+        self._guards = faults.active() is not None or getattr(pl, "guards", False)
+        self._sentinel = (faults.SentinelLane(bk)
+                          if self._guards and pl.optimized
+                          and pr.predicted_refreshes == 0 else None)
+        det = getattr(pl, "straggler_det", None)
+        costs = getattr(pl, "op_costs", None) or {}
+        ctx0 = getattr(pl, "shard_ctx", None)
+        led0 = ctx0.modeled_seconds(costs) if (det and ctx0) else 0.0
+        ckpt = StageCheckpoint()
+        overflow_tries = 0
+        loss_tries = 0
         from .sharded import activate
         try:
-            # Sharded scan execution: with a planner shard context every
-            # stacked column launched below pads/places its block lanes
-            # over the mesh data axis (no-op when shard_ctx is None).
-            with activate(bk, getattr(pl, "shard_ctx", None)):
-                out = self._execute(cq, warm)
+            while True:
+                try:
+                    # Sharded scan execution: with a planner shard
+                    # context every stacked column launched below
+                    # pads/places its block lanes over the mesh data
+                    # axis (no-op when shard_ctx is None).  Re-read per
+                    # attempt: device-loss recovery swaps the context.
+                    with activate(bk, getattr(pl, "shard_ctx", None)):
+                        with faults.tampered_noise_model(bk):
+                            out = self._execute(cq, warm, ckpt=ckpt)
+                    break
+                except faults.DeviceLossFault as f:
+                    self._recover_device_loss(f, ckpt, loss_tries)
+                    loss_tries += 1
+                except faults.NoiseOverflowFault as f:
+                    self._recover_overflow(f, ckpt, overflow_tries)
+                    overflow_tries += 1
+            if det is not None and getattr(pl, "shard_ctx", None) is not None:
+                self._straggler_round(det, costs, ctx0, led0)
         finally:
             end = bk.stats.clone()
             self.report.measured_depth = bk.stats.max_depth
@@ -176,9 +320,88 @@ class Executor:
             self.report.cache_admit_refreshes = (
                 cache.stats.admit_refresh_blocks - cs0.admit_refresh_blocks)
             bk.stats.max_depth = max(prior_max, bk.stats.max_depth)
+            self._sentinel = None
         if validate:
             self.report.validate()
         return out
+
+    # --------------------------------------------------------- recovery
+    def _recover_device_loss(self, f, ckpt: StageCheckpoint,
+                             tries: int) -> None:
+        """Reshard onto the survivors and resume from the checkpoint.
+        Raises the fault through when no viable mesh remains or the
+        retry budget is spent."""
+        pl = self.pl
+        ctx = getattr(pl, "shard_ctx", None)
+        if ctx is None or tries >= MAX_DEVICE_LOSS_RECOVERIES:
+            raise f
+        try:
+            new_ctx = ctx.reshard([f.worker if f.worker is not None else 0])
+        except RuntimeError as e:
+            raise faults.DeviceLossFault(
+                f"{self.report.name}: no viable scan mesh after losing "
+                f"worker {f.worker}: {e}", query=self.report.name,
+                stage=f.stage, worker=f.worker) from e
+        pl.shard_ctx = new_ctx
+        ckpt.resumes += 1
+        self.report.recoveries.append({
+            "kind": f.kind, "stage": f.stage, "worker": f.worker,
+            "action": f"reshard {ctx.shards}->{new_ctx.shards}, resume "
+                      f"after {ckpt.completed()}"})
+
+    def _recover_overflow(self, f, ckpt: StageCheckpoint,
+                          tries: int) -> None:
+        """Bounded overflow recovery: refresh-and-retry, then re-derive
+        from base columns, then typed failure (DESIGN §9)."""
+        pl, bk = self.pl, self.bk
+        if tries >= MAX_OVERFLOW_RETRIES:
+            raise f
+        if tries == 0:
+            # The tracked noise of every materialized mask is suspect —
+            # rejuvenate the checkpointed blocks, drop cache entries
+            # (their born_levels were priced with the bad model), retry.
+            ckpt.refresh_all(bk)
+            pl.mask_cache.clear()
+            action = "refresh-and-retry"
+        else:
+            # Refreshing did not clear the overflow: the materialized
+            # values themselves are suspect.  Re-derive everything from
+            # base columns.
+            ckpt.clear()
+            pl.mask_cache.clear()
+            action = "re-derive-from-base"
+        if self._sentinel is not None:
+            self._sentinel = faults.SentinelLane(bk)
+        self.report.recoveries.append({
+            "kind": f.kind, "stage": f.stage, "action": action,
+            "detail": f.detail})
+
+    def _straggler_round(self, det, costs: dict, ctx0, led0: float) -> None:
+        """Elastic loop: per-shard heartbeats from this run's cost-ledger
+        delta, detector evaluation, and reshard away exclusions.  A
+        fleet with no viable survivor mesh raises a typed fault."""
+        pl = self.pl
+        ctx = pl.shard_ctx
+        plan = faults.active()
+        slow = plan.straggler_slowdown if plan is not None else {}
+        base = led0 if ctx is ctx0 else 0.0
+        for worker, t in ctx.heartbeats(costs, slow, baseline=base).items():
+            det.report(worker, t)
+        excluded = [w for w in det.evaluate() if w < ctx.shards]
+        if not excluded:
+            return
+        try:
+            new_ctx = ctx.reshard(excluded)
+        except RuntimeError as e:
+            raise faults.StragglerFault(
+                f"{self.report.name}: straggler exclusion {excluded} "
+                f"leaves no viable scan mesh: {e}",
+                query=self.report.name, stage="straggler",
+                detail={"excluded": excluded}) from e
+        pl.shard_ctx = new_ctx
+        self.report.recoveries.append({
+            "kind": "straggler", "excluded": excluded,
+            "action": f"reshard {ctx.shards}->{new_ctx.shards}"})
 
     # ------------------------------------------------------- compilation
     def _split_group_in(self, where, group_cols):
@@ -265,13 +488,23 @@ class Executor:
                            cq.inject_layers)
 
     # --------------------------------------------------------- execution
-    def _execute(self, cq: CompiledQuery, warm: bool = False) -> dict:
+    @staticmethod
+    def _gmask_blocks(gmasks: dict) -> list:
+        return [b for d in gmasks.values() for blocks in d.values()
+                for b in blocks]
+
+    def _execute(self, cq: CompiledQuery, warm: bool = False,
+                 ckpt: StageCheckpoint | None = None) -> dict:
         pl, bk = self.pl, self.bk
         plan, fact = cq.plan, cq.fact
         stats = bk.stats
         group_cols, per_col_items = cq.group_cols, cq.per_col_items
         where_expr, where_node, aux_nodes = (cq.where_expr, cq.where_node,
                                              cq.aux_nodes)
+        # Stage boundaries double as checkpoints: a completed stage's
+        # payload is replayed on resume instead of re-derived, and as
+        # injection points for the device-loss fault class.
+        ckpt = ckpt if ckpt is not None else StageCheckpoint()
 
         if pl.optimized:
             # Stage 1 — fused atom evaluation: every distinct comparison
@@ -279,46 +512,94 @@ class Executor:
             # one stacked launch per shape.  Warm (workload) executions
             # arrive with the batch-wide flush already done.
             ev = self.ev if self.ev is not None else pl.evaluator()
-            snap = stats.clone()
-            if not warm:
-                self.request_atoms(cq, ev)
-                ev.flush()
-            self.report.record("atoms[fused]", snap, stats.clone())
+            if not ckpt.has("atoms"):
+                faults.maybe_device_loss("atoms")
+                snap = stats.clone()
+                if not warm:
+                    self.request_atoms(cq, ev)
+                    ev.flush()
+                self.report.record("atoms[fused]", snap, stats.clone())
+                ckpt.put("atoms", True)
 
-            snap = stats.clone()
-            where = (run_mask_node(where_node, ev, pl)
-                     if where_node is not None else None)
-            self.report.record("where", snap, stats.clone())
+            if ckpt.has("where"):
+                where = ckpt.get("where")
+            else:
+                faults.maybe_device_loss("where")
+                snap = stats.clone()
+                where = (run_mask_node(where_node, ev, pl)
+                         if where_node is not None else None)
+                self.report.record("where", snap, stats.clone())
+                ckpt.put("where", where, blocks=where or ())
+
             aux = {}
             for name, (a, node) in aux_nodes.items():
+                stage = f"aux:{name}"
+                if ckpt.has(stage):
+                    aux[name] = ckpt.get(stage)
+                    continue
+                faults.maybe_device_loss(stage)
                 snap = stats.clone()
                 aux[name] = self._translate_aux(a, node, ev, None)
-                self.report.record(f"aux:{name}", snap, stats.clone())
-            gmasks = {
-                col: dict(ev.eq_masks(fact, col, [vid for _n, vid in items],
-                                      need_levels=cq.inject_layers))
-                for col, items in zip(group_cols, per_col_items)
-            }
+                self.report.record(stage, snap, stats.clone())
+                ckpt.put(stage, aux[name], blocks=aux[name])
+
+            if ckpt.has("gmasks"):
+                gmasks = ckpt.get("gmasks")
+            elif group_cols:
+                faults.maybe_device_loss("gmasks")
+                gmasks = {
+                    col: dict(ev.eq_masks(fact, col,
+                                          [vid for _n, vid in items],
+                                          need_levels=cq.inject_layers))
+                    for col, items in zip(group_cols, per_col_items)
+                }
+                ckpt.put("gmasks", gmasks,
+                         blocks=self._gmask_blocks(gmasks))
+            else:
+                gmasks = {}
         else:
             # Classical pipeline: sequential chains, no fusion, joins over
             # filtered FK columns, raw group EQs combined after the WHERE.
-            snap = stats.clone()
-            where = (pl.where_mask(fact, where_expr)
-                     if where_expr is not None else None)
-            self.report.record("where[seq]", snap, stats.clone())
+            if ckpt.has("where"):
+                where = ckpt.get("where")
+            else:
+                faults.maybe_device_loss("where")
+                snap = stats.clone()
+                where = (pl.where_mask(fact, where_expr)
+                         if where_expr is not None else None)
+                self.report.record("where[seq]", snap, stats.clone())
+                ckpt.put("where", where, blocks=where or ())
             aux = {}
             for name, (a, node) in aux_nodes.items():
+                stage = f"aux:{name}"
+                if ckpt.has(stage):
+                    aux[name] = ckpt.get(stage)
+                    continue
+                faults.maybe_device_loss(stage)
                 snap = stats.clone()
                 fk_ov = (ops.mask_columns(bk, fact.col(a.hop.fk).blocks, where)
                          if where is not None else None)
                 aux[name] = self._translate_aux(a, node, None, fk_ov)
-                self.report.record(f"aux:{name}[pushdown]", snap, stats.clone())
-            gmasks = {
-                col: dict(ops.group_masks(bk, fact, col,
-                                          [vid for _n, vid in items]))
-                for col, items in zip(group_cols, per_col_items)
-            }
+                self.report.record(f"{stage}[pushdown]", snap, stats.clone())
+                ckpt.put(stage, aux[name], blocks=aux[name])
+            if ckpt.has("gmasks"):
+                gmasks = ckpt.get("gmasks")
+            elif group_cols:
+                faults.maybe_device_loss("gmasks")
+                gmasks = {
+                    col: dict(ops.group_masks(bk, fact, col,
+                                              [vid for _n, vid in items]))
+                    for col, items in zip(group_cols, per_col_items)
+                }
+                ckpt.put("gmasks", gmasks,
+                         blocks=self._gmask_blocks(gmasks))
+            else:
+                gmasks = {}
 
+        # The aggregate is never checkpointed — its outputs are the
+        # decrypted results themselves, which must re-derive under any
+        # recovery so the guards re-check them.
+        faults.maybe_device_loss("aggregate")
         snap = stats.clone()
         out = (self._grouped(plan, fact, per_col_items, gmasks, where, aux)
                if group_cols else self._ungrouped(plan, fact, where))
@@ -341,6 +622,18 @@ class Executor:
 
     # ------------------------------------------------------- aggregation
     def _dec(self, ct):
+        """The decrypt boundary.  With guards armed every result passes
+        the headroom check (tracked budget minus any model-hidden growth
+        must clear zero) and the sentinel lane replays the run's
+        observed depth on a known plaintext — both raise a typed
+        NoiseOverflowFault *before* a garbage value can be returned."""
+        if self._guards:
+            faults.check_decrypt(self.bk, ct,
+                                 query=self.report.name if self.report else "")
+            if self._sentinel is not None:
+                self._sentinel.verify(
+                    self.bk.stats.max_depth,
+                    query=self.report.name if self.report else "")
         return int(self.bk.decrypt(ct)[0])
 
     def _dec_agg(self, agg, r):

@@ -77,7 +77,8 @@ class PlanReport:
 
 class Planner:
     def __init__(self, db: Database, optimized: bool = True, cache=None,
-                 shards: int | None = None, mesh="auto"):
+                 shards: int | None = None, mesh="auto",
+                 guards: bool = False):
         from .workload import WorkloadCache
         self.db = db
         self.bk = db.bk
@@ -104,6 +105,25 @@ class Planner:
         # share_masks enables the CSE cache.  Both default to the regime.
         self.fuse_masks = optimized
         self.share_masks = optimized
+        # Fault-tolerant runtime (DESIGN §9): guards=True arms the
+        # decrypt-boundary headroom check, the plaintext sentinel lane
+        # and bounded overflow recovery even outside an injection scope
+        # (the executor always guards while a FaultPlan is armed).
+        self.guards = guards
+        # Elastic wiring: attach_straggler_detector populates these;
+        # after every sharded run the executor synthesizes per-shard
+        # heartbeats from the cost-ledger delta, reports them, and
+        # re-shards away excluded workers.
+        self.straggler_det = None
+        self.op_costs: dict | None = None
+
+    def attach_straggler_detector(self, det, costs: dict) -> None:
+        """Wire a runtime/elastic.py StragglerDetector into execution:
+        per-shard step times come from `ShardContext.heartbeats` priced
+        with `costs` (measured per-op seconds), and exclusion feeds
+        `ShardContext.reshard` — the scan-axis elasticity loop."""
+        self.straggler_det = det
+        self.op_costs = dict(costs)
 
     def evaluator(self):
         """A physical-atom evaluator bound to this planner's mask cache;

@@ -97,6 +97,23 @@ class ShardContext:
         coll = self.folds * tree * costs.get("add", 0.0)
         return dist / self.shards + repl + coll
 
+    def heartbeats(self, costs: dict, slowdowns: dict | None = None,
+                   baseline: float = 0.0) -> dict:
+        """Per-worker synthetic step times from the cost ledger.
+
+        The sharded scan is bulk-synchronous: every worker carries an
+        equal share of the distributed units plus the replicated tail,
+        so the modeled per-run seconds *are* each worker's step time.
+        `slowdowns` scales individual workers (real hardware skew, or
+        an injected straggler — runtime/faults.py); `baseline` subtracts
+        a prior `modeled_seconds` snapshot so a heartbeat reflects one
+        execution, not the context's lifetime.  The executor feeds these
+        to StragglerDetector.report after every sharded run.
+        """
+        step = max(self.modeled_seconds(costs) - baseline, 0.0)
+        slow = slowdowns or {}
+        return {w: step * float(slow.get(w, 1.0)) for w in range(self.shards)}
+
     def ledger_snapshot(self) -> dict:
         return {"shards": self.shards, "dist": dict(self.dist),
                 "repl": dict(self.repl), "folds": self.folds,

@@ -48,6 +48,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from ..runtime import faults
+
 
 @dataclasses.dataclass
 class CacheStats:
@@ -64,6 +66,9 @@ class CacheStats:
     fk_hits: int = 0              # per-key join EQ bank reuses
     fk_misses: int = 0            # per-key join EQ banks built
     evictions: int = 0            # entries dropped by the LRU bound
+    poison_drops: int = 0         # entries failing their content
+                                  # fingerprint at serve (dropped or,
+                                  # under integrity='fail', fatal)
 
     def clone(self) -> "CacheStats":
         return dataclasses.replace(self)
@@ -89,6 +94,9 @@ class CacheEntry:
     table: str
     born_levels: int              # min levels_left across blocks at insert
     born_run: int                 # begin_run() epoch that derived it
+    fp: list | None = None        # content fingerprints at insert (None
+                                  # when the backend's handles are opaque
+                                  # — real BFV — or integrity is off)
 
 
 class WorkloadCache:
@@ -100,10 +108,19 @@ class WorkloadCache:
     admission reads `bk.levels_left` at serve time, never a snapshot.
     """
 
-    def __init__(self, policy: str = "refresh", max_entries: int | None = None):
+    def __init__(self, policy: str = "refresh", max_entries: int | None = None,
+                 integrity: str = "rederive"):
         assert policy in ("refresh", "rederive"), policy
         assert max_entries is None or max_entries > 0, max_entries
+        assert integrity in ("off", "rederive", "fail"), integrity
         self.policy = policy
+        # At-rest integrity: entries record content fingerprints at
+        # insert and re-verify at serve.  'rederive' (default) silently
+        # drops a tampered entry and lets the consumer re-run the
+        # circuit; 'fail' raises a typed CachePoisonFault; 'off' skips
+        # the check.  Opaque backends (real BFV) degrade to 'off'
+        # automatically — see _BackendBase.fingerprint.
+        self.integrity = integrity
         # LRU bound, applied independently to the atom store and the FK
         # bank store.  None = unbounded (the historical behaviour).  A
         # hit moves its entry to the MRU end; insertion past the bound
@@ -183,10 +200,38 @@ class WorkloadCache:
             store.pop(next(iter(store)))       # LRU = oldest-ordered key
             self.stats.evictions += 1
 
+    # ---------------------------------------------------------- integrity
+    def _fps(self, bk, flat_blocks):
+        if self.integrity == "off":
+            return None
+        return faults.fingerprint_blocks(bk, flat_blocks)
+
+    def _intact(self, bk, key, entry, flat_blocks, store: dict) -> bool:
+        """Re-verify an entry's content fingerprints at serve time.  A
+        mismatch means the ciphertext payload changed outside the
+        legitimate mutation channel (refresh touches only noise) — the
+        cache-poison fault class.  The entry is dropped either way;
+        integrity='fail' escalates to a typed fault."""
+        if entry.fp is None:
+            return True
+        now = faults.fingerprint_blocks(bk, flat_blocks)
+        if now == entry.fp:
+            return True
+        del store[key]
+        self.stats.poison_drops += 1
+        if self.integrity == "fail":
+            raise faults.CachePoisonFault(
+                f"cache entry {key} failed its content fingerprint "
+                f"({len([a for a, b in zip(entry.fp, now) if a != b])} of "
+                f"{len(entry.fp)} blocks tampered)",
+                stage="cache-serve", detail={"key": list(map(str, key))})
+        return False
+
     def insert(self, bk, atom, blocks: list) -> None:
         self.entries[atom.key] = CacheEntry(
             blocks, atom.table,
-            min(bk.levels_left(b) for b in blocks), self._run)
+            min(bk.levels_left(b) for b in blocks), self._run,
+            self._fps(bk, blocks))
         self.stats.misses += 1
         self._evict(self.entries)
 
@@ -203,6 +248,8 @@ class WorkloadCache:
         e = self.entries.get(atom.key)
         if e is None:
             return None
+        if not self._intact(bk, atom.key, e, e.blocks, self.entries):
+            return None                      # poisoned: force re-derive
         have = min(bk.levels_left(b) for b in e.blocks)
         required = min(need_levels, e.born_levels)
         if have < required:
@@ -231,6 +278,9 @@ class WorkloadCache:
         e = self.fk_banks.get((table, fk, nparent))
         if e is None:
             return None
+        flat = [b for masks in e.blocks for b in masks]
+        if not self._intact(bk, (table, fk, nparent), e, flat, self.fk_banks):
+            return None                      # poisoned: rebuild the bank
         if any(bk.levels_left(b) < 1 for masks in e.blocks for b in masks):
             del self.fk_banks[(table, fk, nparent)]   # degraded: rebuild
             self.stats.rederives += 1
@@ -242,7 +292,8 @@ class WorkloadCache:
     def fk_store(self, bk, table: str, fk: str, nparent: int, bank: list) -> None:
         flat = [b for masks in bank for b in masks]
         self.fk_banks[(table, fk, nparent)] = CacheEntry(
-            bank, table, min(bk.levels_left(b) for b in flat), self._run)
+            bank, table, min(bk.levels_left(b) for b in flat), self._run,
+            self._fps(bk, flat))
         self.stats.fk_misses += 1
         self._evict(self.fk_banks)
 

@@ -22,6 +22,8 @@ import threading
 import jax
 import numpy as np
 
+from .faults import CheckpointCorruptFault
+
 
 def _flatten(tree):
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -78,7 +80,10 @@ class CheckpointManager:
                 fn = f"{group}__{name.replace('/', '__')}.npy"
                 np.save(os.path.join(tmp, fn), arr)
                 manifest["leaves"][f"{group}/{name}"] = {
-                    "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+                    "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                    # exact on-disk size: lets verify_step detect a leaf
+                    # truncated *after* the atomic publish (at-rest rot)
+                    "bytes": os.path.getsize(os.path.join(tmp, fn))}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
@@ -104,13 +109,39 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def verify_step(self, step: int) -> bool:
+        """Cheap integrity check of a published snapshot: manifest reads
+        back and every leaf file exists at its recorded byte size.
+        Catches truncation/deletion *after* the atomic publish, which
+        the write-path atomicity can not protect against."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return False
+        for info in manifest.get("leaves", {}).values():
+            path = os.path.join(d, info["file"])
+            if not os.path.exists(path):
+                return False
+            if "bytes" in info and os.path.getsize(path) != info["bytes"]:
+                return False
+        return True
+
     def restore(self, step: int, params_like, opt_like=None, shardings=None):
         """Rebuild pytrees from a checkpoint.  params_like/opt_like give
         structure; shardings (optional, same structure) re-shard onto the
-        *current* mesh — elastic restore onto any device count."""
+        *current* mesh — elastic restore onto any device count.  An
+        unreadable manifest or leaf raises a typed
+        CheckpointCorruptFault (runtime/faults.py)."""
         d = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointCorruptFault(
+                f"step {step}: manifest unreadable: {e}",
+                stage="restore", detail={"step": step}) from e
 
         def rebuild(group, like, shard_tree):
             if like is None:
@@ -122,7 +153,13 @@ class CheckpointManager:
             leaves = []
             for name, ref, sh in zip(names, flat_like, shards):
                 info = manifest["leaves"][f"{group}/{name}"]
-                arr = np.load(os.path.join(d, info["file"]))
+                try:
+                    arr = np.load(os.path.join(d, info["file"]))
+                except (OSError, ValueError, EOFError) as e:
+                    raise CheckpointCorruptFault(
+                        f"step {step}: leaf {group}/{name} unreadable: {e}",
+                        stage="restore",
+                        detail={"step": step, "leaf": f"{group}/{name}"}) from e
                 if sh is not None:
                     leaves.append(jax.device_put(arr, sh))
                 else:
@@ -134,3 +171,26 @@ class CheckpointManager:
         opt = rebuild("opt", opt_like,
                       shardings.get("opt") if shardings else None)
         return params, opt, manifest["extra"]
+
+    def restore_latest_valid(self, params_like, opt_like=None, shardings=None):
+        """Restore the newest *intact* snapshot, walking backward past
+        corrupt ones (truncated leaves, unreadable manifests — the
+        at-rest failures verify_step detects).  Returns
+        (step, params, opt, extra); raises CheckpointCorruptFault when
+        no intact snapshot remains."""
+        skipped = []
+        for step in reversed(self.all_steps()):
+            if not self.verify_step(step):
+                skipped.append(step)
+                continue
+            try:
+                params, opt, extra = self.restore(
+                    step, params_like, opt_like, shardings)
+            except CheckpointCorruptFault:
+                skipped.append(step)
+                continue
+            return step, params, opt, extra
+        raise CheckpointCorruptFault(
+            f"no intact checkpoint under {self.dir} "
+            f"(skipped corrupt steps {skipped})",
+            stage="restore", detail={"skipped": skipped})

@@ -20,6 +20,8 @@ class WorkerStat:
     ewma: float = 0.0
     last_seen: float = 0.0
     strikes: int = 0
+    reports: int = 0    # heartbeats received
+    judged: int = 0     # heartbeats already consumed by evaluate()
 
 
 class StragglerDetector:
@@ -37,23 +39,39 @@ class StragglerDetector:
         st.ewma = step_time if st.ewma == 0 else \
             self.alpha * step_time + (1 - self.alpha) * st.ewma
         st.last_seen = now
+        st.reports += 1
 
     def _median(self) -> float:
         vals = sorted(w.ewma for w in self.workers.values() if w.ewma > 0)
         return vals[len(vals) // 2] if vals else 0.0
 
     def evaluate(self, now: float | None = None) -> list[int]:
-        """Returns the exclusion list (dead or persistently slow)."""
+        """Returns the exclusion list (dead or persistently slow).
+
+        Idempotent over a heartbeat window: strikes advance only for
+        workers with reports not yet judged, so calling evaluate()
+        repeatedly between heartbeats never double-counts a window
+        toward `patience`.  The deadness check stays unconditional — a
+        silent worker has no new reports by definition.
+        """
         now = time.monotonic() if now is None else now
         med = self._median()
         out = []
         for wid, st in self.workers.items():
             dead = now - st.last_seen > self.timeout_s
-            slow = med > 0 and st.ewma > self.threshold * med
-            st.strikes = st.strikes + 1 if slow else 0
+            if st.reports > st.judged:
+                slow = med > 0 and st.ewma > self.threshold * med
+                st.strikes = st.strikes + 1 if slow else 0
+                st.judged = st.reports
             if dead or st.strikes >= self.patience:
                 out.append(wid)
         return sorted(out)
+
+    def reset(self, worker: int) -> None:
+        """Readmission: forget a worker's history entirely (it returns
+        as a blank slate after replacement/repair — stale EWMA from its
+        degraded era must not bias the new incarnation)."""
+        self.workers.pop(worker, None)
 
 
 def elastic_mesh_plan(total_devices: int, excluded: int,

@@ -1,0 +1,458 @@
+"""Chaos suite: deterministic fault injection against the execution
+runtime (runtime/faults.py, DESIGN.md §9).
+
+The acceptance contract under test: for every injected fault class —
+noise under-prediction, device loss mid-scan, straggler exclusion,
+cache corruption, checkpoint truncation — a query over the Q1/Q6/Q12/
+Q19 mix either decrypts byte-identical to the fault-free run or raises
+a typed ExecutionFault.  Zero silent wrong answers.
+
+All scenarios are seeded and counter-driven (FaultPlan fires on fixed
+call counts, never randomness or wall-clock), so the matrix is
+reproducible run to run; CI's tests-chaos lane executes it under 8
+forced host devices.  The profile is the multi-block paper-noise set
+(n=64, t=65537, k=30): tiny-scale lineitem packs to 3 blocks, so the
+sharded fold, padding and per-stage checkpoints are all genuinely
+exercised.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.noise import NoiseProfile, UnderReportingNoiseModel
+from repro.engine import queries as Q
+from repro.engine import tpch
+from repro.engine.backend import MockBackend
+from repro.engine.executor import (MAX_DEVICE_LOSS_RECOVERIES, ExecReport,
+                                   run_via_plan)
+from repro.engine.planner import Planner
+from repro.engine.workload import WorkloadCache
+from repro.runtime import faults
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.elastic import StragglerDetector
+
+SEED = int(os.environ.get("NSHEDB_CHAOS_SEED", "1234"))
+MULTIBLOCK = NoiseProfile(n=64, t=65537, k=30)
+MIX = Q.PLAN_EXECUTABLE                      # Q1 Q6 Q12 Q19
+COSTS = {"mul": 0.05, "mul_plain": 0.055, "mul_scalar": 0.002,
+         "add": 0.0015, "rotate": 0.105, "refresh": 44.0}
+
+
+@pytest.fixture(scope="module")
+def mock_mb():
+    return MockBackend(MULTIBLOCK)
+
+
+@pytest.fixture(scope="module")
+def db_mb(mock_mb):
+    return tpch.load(mock_mb, tpch.Scale.tiny(), seed=7)
+
+
+@pytest.fixture(scope="module")
+def baselines(db_mb):
+    """Fault-free reference results per query (single-device, no guards
+    — the bytes every recovered run must reproduce)."""
+    return {qn: run_via_plan(Planner(db_mb, optimized=True),
+                             Q.QUERIES[qn][0]())
+            for qn in MIX}
+
+
+def _run_faulted(db, qname, plan_obj, shards=2, planner_kw=None):
+    pl = Planner(db, optimized=True, shards=shards, **(planner_kw or {}))
+    with faults.inject(plan_obj):
+        out = run_via_plan(pl, Q.QUERIES[qname][0]())
+    return out, pl
+
+
+# ---------------------------------------------------------------------------
+# Guards are inert on healthy runs.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("qname", MIX)
+def test_guarded_run_matches_fault_free(db_mb, baselines, qname):
+    """Armed guards (headroom check + sentinel lane) must not perturb a
+    healthy execution: identical decrypts, zero recovery events."""
+    out, pl = _run_faulted(db_mb, qname, faults.FaultPlan())
+    assert out == baselines[qname]
+    pl2 = Planner(db_mb, optimized=True, guards=True)
+    assert run_via_plan(pl2, Q.QUERIES[qname][0]()) == baselines[qname]
+
+
+# ---------------------------------------------------------------------------
+# Fault class: noise under-prediction (overflow).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("qname", MIX)
+def test_underprediction_recovers_identical(db_mb, baselines, qname):
+    """A transient model mispredict (3 tampered muls hiding 500 bits
+    each) trips the decrypt-boundary guard; refresh-and-retry must
+    reproduce the fault-free bytes and report the recovery."""
+    fp = faults.FaultPlan(underpredict_bits=500.0, underpredict_count=3)
+    out, _ = _run_faulted(db_mb, qname, fp)
+    assert out == baselines[qname]
+    assert fp.fired("underpredict") == 3
+
+
+def test_underprediction_recovery_is_reported(db_mb, baselines):
+    from repro.engine.executor import Executor
+    pl = Planner(db_mb, optimized=True, shards=2)
+    ex = Executor(pl)
+    with faults.inject(faults.FaultPlan(underpredict_bits=500.0,
+                                        underpredict_count=3)):
+        out = ex.run(Q.QUERIES["Q6"][0]())
+    assert out == baselines["Q6"]
+    kinds = [r["kind"] for r in ex.report.recoveries]
+    assert "overflow" in kinds
+    actions = [r["action"] for r in ex.report.recoveries]
+    assert "refresh-and-retry" in actions
+
+
+@pytest.mark.parametrize("qname", MIX)
+def test_persistent_underprediction_raises_typed(db_mb, qname):
+    """A persistent model bias can not be refreshed away: after the
+    bounded retries the run must fail typed, never return garbage."""
+    fp = faults.FaultPlan(underpredict_bits=500.0, underpredict_count=10**9)
+    with pytest.raises(faults.NoiseOverflowFault) as ei:
+        _run_faulted(db_mb, qname, fp)
+    assert ei.value.kind == "overflow"
+    assert isinstance(ei.value, faults.ExecutionFault)
+
+
+def test_underreporting_model_tracks_hidden_bits():
+    m = UnderReportingNoiseModel(MockBackend(MULTIBLOCK).model, 100.0, skip=1)
+    v = m.fresh()
+    a = m.mul(v, v)            # skipped: truthful
+    b = m.mul(v, v)            # tampered: 100 bits hidden
+    assert a == b + 100.0
+    assert m.hidden_bits == 100.0
+    assert m.budget(v) == m.inner.budget(v)   # delegation intact
+
+
+# ---------------------------------------------------------------------------
+# Fault class: device loss mid-scan.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("qname", MIX)
+@pytest.mark.parametrize("stage", ["where", "fold", "aggregate"])
+def test_device_loss_resumes_identical(db_mb, baselines, qname, stage):
+    """Losing a worker mid-stage (including inside the block fold) must
+    reshard onto the survivors and resume from the last checkpoint,
+    reproducing the fault-free bytes."""
+    fp = faults.FaultPlan(device_loss_stage=stage, device_loss_worker=1)
+    out, pl = _run_faulted(db_mb, qname, fp)
+    assert out == baselines[qname]
+    assert pl.shard_ctx.shards == 1           # 2 -> 1 after exclusion
+    assert fp.fired("device-loss") == 1
+
+
+def test_device_loss_resume_skips_completed_stages(db_mb, baselines):
+    """Loss at the aggregate must resume *after* the mask stages — the
+    checkpoint, not a from-scratch rerun."""
+    from repro.engine.executor import Executor
+    pl = Planner(db_mb, optimized=True, shards=2)
+    ex = Executor(pl)
+    with faults.inject(faults.FaultPlan(device_loss_stage="aggregate",
+                                        device_loss_worker=1)):
+        out = ex.run(Q.QUERIES["Q6"][0]())
+    assert out == baselines["Q6"]
+    (rec,) = [r for r in ex.report.recoveries if r["kind"] == "device-loss"]
+    assert "atoms" in rec["action"] and "where" in rec["action"]
+    # the where stage ran exactly once across both attempts
+    assert sum(1 for h in ex.report.history if h["stage"] == "where") == 1
+
+
+def test_repeated_device_loss_exhausts_typed(db_mb):
+    """A fault that refires on every attempt must exhaust the bounded
+    recovery budget and surface typed."""
+    fp = faults.FaultPlan(device_loss_stage="aggregate", device_loss_worker=0,
+                          device_loss_count=10**9)
+    with pytest.raises(faults.DeviceLossFault) as ei:
+        _run_faulted(db_mb, "Q6", fp)
+    assert ei.value.kind == "device-loss"
+    # bounded: initial failure + at most MAX recoveries
+    assert fp.fired("device-loss") <= MAX_DEVICE_LOSS_RECOVERIES + 1
+
+
+def test_device_loss_without_shards_is_typed(db_mb):
+    """No shard context -> nothing to reshard onto: the fault propagates
+    typed instead of looping."""
+    fp = faults.FaultPlan(device_loss_stage="aggregate", device_loss_worker=0)
+    pl = Planner(db_mb, optimized=True)
+    with faults.inject(fp):
+        with pytest.raises(faults.DeviceLossFault):
+            run_via_plan(pl, Q.QUERIES["Q6"][0]())
+
+
+# ---------------------------------------------------------------------------
+# Fault class: straggler exclusion.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("qname", MIX)
+def test_straggler_excluded_and_resharded(db_mb, baselines, qname):
+    """A 10x-slow worker (synthetic heartbeats from the cost ledger) is
+    struck out after `patience` rounds; the mesh shrinks 4->2 and
+    results stay identical throughout."""
+    pl = Planner(db_mb, optimized=True, shards=4)
+    det = StragglerDetector(threshold=2.0, patience=2, timeout_s=1e9)
+    pl.attach_straggler_detector(det, COSTS)
+    with faults.inject(faults.FaultPlan(straggler_slowdown={3: 10.0})):
+        for _ in range(3):
+            out = run_via_plan(pl, Q.QUERIES[qname][0]())
+            assert out == baselines[qname]
+    assert pl.shard_ctx.shards == 2
+    assert 3 in det.workers and det.workers[3].strikes >= det.patience
+
+
+def test_straggler_heartbeats_come_from_ledger(db_mb):
+    """Heartbeats are the run's modeled seconds, not wall-clock: equal
+    for healthy workers, scaled for the slowed one."""
+    pl = Planner(db_mb, optimized=True, shards=4)
+    det = StragglerDetector(threshold=2.0, patience=3, timeout_s=1e9)
+    pl.attach_straggler_detector(det, COSTS)
+    with faults.inject(faults.FaultPlan(straggler_slowdown={2: 5.0})):
+        run_via_plan(pl, Q.QUERIES["Q6"][0]())
+    e0, e2 = det.workers[0].ewma, det.workers[2].ewma
+    assert e0 > 0 and abs(e2 - 5.0 * e0) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Fault class: cache poisoning.
+# ---------------------------------------------------------------------------
+
+def test_cache_poison_detected_and_rederived(db_mb, baselines):
+    """Default integrity ('rederive'): tampered entries fail their
+    fingerprint at serve, are dropped, and the circuits re-derive —
+    identical results, poison_drops counted."""
+    bk = db_mb.bk
+    cache = WorkloadCache()
+    pl = Planner(db_mb, optimized=True, cache=cache)
+    assert run_via_plan(pl, Q.QUERIES["Q6"][0]()) == baselines["Q6"]
+    faults.poison_cache(cache, bk, entries=None)
+    assert run_via_plan(pl, Q.QUERIES["Q6"][0]()) == baselines["Q6"]
+    assert cache.stats.poison_drops > 0
+
+
+@pytest.mark.parametrize("qname", MIX)
+def test_cache_poison_matrix(db_mb, baselines, qname):
+    bk = db_mb.bk
+    cache = WorkloadCache()
+    pl = Planner(db_mb, optimized=True, cache=cache)
+    run_via_plan(pl, Q.QUERIES[qname][0]())
+    faults.poison_cache(cache, bk, entries=None)
+    out = run_via_plan(pl, Q.QUERIES[qname][0]())
+    assert out == baselines[qname]
+    assert cache.stats.poison_drops > 0
+
+
+def test_cache_poison_strict_mode_raises_typed(db_mb):
+    bk = db_mb.bk
+    cache = WorkloadCache(integrity="fail")
+    pl = Planner(db_mb, optimized=True, cache=cache)
+    run_via_plan(pl, Q.QUERIES["Q6"][0]())
+    faults.poison_cache(cache, bk, entries=1)
+    with pytest.raises(faults.CachePoisonFault) as ei:
+        run_via_plan(pl, Q.QUERIES["Q6"][0]())
+    assert ei.value.kind == "cache-poison"
+
+
+def test_cache_poison_silent_without_integrity(db_mb, baselines):
+    """Negative control: with integrity off the poisoned entry IS a
+    silent wrong answer — proof the fingerprint check is load-bearing,
+    not redundant with some other guard."""
+    bk = db_mb.bk
+    cache = WorkloadCache(integrity="off")
+    pl = Planner(db_mb, optimized=True, cache=cache)
+    run_via_plan(pl, Q.QUERIES["Q6"][0]())
+    faults.poison_cache(cache, bk, entries=None)
+    assert run_via_plan(pl, Q.QUERIES["Q6"][0]()) != baselines["Q6"]
+
+
+def test_bfv_fingerprints_degrade_to_none():
+    """Opaque handles (real BFV: refresh re-encrypts content) must
+    yield fp=None entries — integrity silently off, never a spurious
+    poison verdict."""
+    from repro.core.params import make_params
+    from repro.engine.backend import BFVBackend
+    bk = BFVBackend(make_params(n=128, t=257, k=12), seed=11)
+    assert bk.fingerprint(bk.encrypt(np.arange(4))) is None
+    assert faults.fingerprint_blocks(bk, [bk.encrypt(np.arange(4))]) is None
+
+
+# ---------------------------------------------------------------------------
+# Fault class: checkpoint truncation.
+# ---------------------------------------------------------------------------
+
+class TestCheckpointCorruption:
+    PARAMS = {"w": np.arange(64, dtype=np.float32),
+              "b": np.ones(8, dtype=np.float64)}
+
+    def test_truncated_leaf_falls_back(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3, async_write=False)
+        mgr.save(1, self.PARAMS, extra={"cursor": 10})
+        mgr.save(2, self.PARAMS, extra={"cursor": 20})
+        faults.truncate_checkpoint(str(tmp_path), 2)
+        assert not mgr.verify_step(2) and mgr.verify_step(1)
+        step, params, _, extra = mgr.restore_latest_valid(self.PARAMS)
+        assert step == 1 and extra == {"cursor": 10}
+        np.testing.assert_array_equal(params["w"], self.PARAMS["w"])
+
+    def test_all_corrupt_raises_typed(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3, async_write=False)
+        mgr.save(1, self.PARAMS)
+        mgr.save(2, self.PARAMS)
+        faults.truncate_checkpoint(str(tmp_path), 1)
+        faults.truncate_checkpoint(str(tmp_path), 2)
+        with pytest.raises(faults.CheckpointCorruptFault) as ei:
+            mgr.restore_latest_valid(self.PARAMS)
+        assert ei.value.kind == "checkpoint-corrupt"
+        assert sorted(ei.value.detail["skipped"]) == [1, 2]
+
+    def test_direct_restore_of_corrupt_step_is_typed(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3, async_write=False)
+        mgr.save(1, self.PARAMS)
+        faults.truncate_checkpoint(str(tmp_path), 1)
+        with pytest.raises(faults.CheckpointCorruptFault):
+            mgr.restore(1, self.PARAMS)
+
+
+# ---------------------------------------------------------------------------
+# The seeded acceptance matrix: every fault class x the query mix.
+# ---------------------------------------------------------------------------
+
+FAULT_CLASSES = ["overflow-transient", "overflow-persistent",
+                 "device-loss", "straggler", "cache-poison"]
+# checkpoint-truncate is query-independent (the store holds training
+# state, not per-query masks) — covered by TestCheckpointCorruption.
+
+
+@pytest.mark.parametrize("qname", MIX)
+@pytest.mark.parametrize("fault", FAULT_CLASSES)
+def test_chaos_matrix_no_silent_wrong_answers(db_mb, baselines, fault, qname):
+    """The ISSUE's acceptance criterion, verbatim: each fault class on
+    each query of the mix ends in byte-identical decrypts or a typed
+    ExecutionFault."""
+    rng = np.random.default_rng(SEED)        # seeds future randomized faults
+    bk = db_mb.bk
+    try:
+        if fault == "overflow-transient":
+            fp = faults.FaultPlan(underpredict_bits=400.0 + 100 * rng.integers(3),
+                                  underpredict_count=2)
+            out, _ = _run_faulted(db_mb, qname, fp)
+        elif fault == "overflow-persistent":
+            fp = faults.FaultPlan(underpredict_bits=500.0,
+                                  underpredict_count=10**9)
+            out, _ = _run_faulted(db_mb, qname, fp)
+        elif fault == "device-loss":
+            fp = faults.FaultPlan(device_loss_stage="any",
+                                  device_loss_worker=int(rng.integers(2)))
+            out, _ = _run_faulted(db_mb, qname, fp)
+        elif fault == "straggler":
+            pl = Planner(db_mb, optimized=True, shards=4)
+            det = StragglerDetector(threshold=2.0, patience=1, timeout_s=1e9)
+            pl.attach_straggler_detector(det, COSTS)
+            with faults.inject(faults.FaultPlan(straggler_slowdown={1: 8.0})):
+                run_via_plan(pl, Q.QUERIES[qname][0]())
+                out = run_via_plan(pl, Q.QUERIES[qname][0]())
+        else:  # cache-poison
+            cache = WorkloadCache()
+            pl = Planner(db_mb, optimized=True, cache=cache)
+            run_via_plan(pl, Q.QUERIES[qname][0]())
+            faults.poison_cache(cache, bk, entries=None)
+            out = run_via_plan(pl, Q.QUERIES[qname][0]())
+    except faults.ExecutionFault as e:
+        assert e.kind in ("overflow", "device-loss", "straggler",
+                          "cache-poison"), e
+        return                                # typed failure: contract held
+    assert out == baselines[qname], f"{fault}/{qname}: silent wrong answer"
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions (here rather than test_runtime.py: that module
+# skips wholesale without hypothesis, and these must run in every lane).
+# ---------------------------------------------------------------------------
+
+def test_straggler_evaluate_idempotent():
+    """Re-evaluating without fresh heartbeats must not accrue strikes:
+    only rounds with new reports are judged (reports/judged watermark)."""
+    det = StragglerDetector(threshold=2.0, patience=3, timeout_s=1e9)
+    for w in range(4):
+        det.report(w, 1.0 if w != 3 else 9.0, now=1.0)
+    for _ in range(5):                       # one round, five evaluations
+        excluded = det.evaluate(now=1.0)
+    assert excluded == []
+    assert det.workers[3].strikes == 1       # one strike, not five
+    for t in (2.0, 3.0):                     # genuine slow rounds do exclude
+        for w in range(4):
+            det.report(w, 1.0 if w != 3 else 9.0, now=t)
+        excluded = det.evaluate(now=t)
+    assert excluded == [3]
+
+
+def test_straggler_reset_readmits():
+    det = StragglerDetector(threshold=2.0, patience=1, timeout_s=1e9)
+    for w in range(4):
+        det.report(w, 1.0 if w != 2 else 9.0, now=1.0)
+    assert det.evaluate(now=1.0) == [2]
+    det.reset(2)                             # e.g. replaced hardware
+    assert 2 not in det.workers
+    for w in range(4):
+        det.report(w, 1.0, now=2.0)
+    assert det.evaluate(now=2.0) == []       # back at full speed, readmitted
+
+
+def test_checkpoint_crash_between_write_and_rename(tmp_path, monkeypatch):
+    """Kill the process after the tmp dir is fully written but before
+    the atomic rename publishes it: the step must not exist, and restore
+    falls back to the previous one."""
+    import os as _os
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_write=False)
+    params = TestCheckpointCorruption.PARAMS
+    mgr.save(1, params, extra={"cursor": 1})
+
+    real_rename = _os.rename
+
+    def crash_rename(src, dst):
+        raise OSError("simulated crash before publish")
+
+    monkeypatch.setattr(_os, "rename", crash_rename)
+    with pytest.raises(OSError):
+        mgr.save(2, params, extra={"cursor": 2})
+    monkeypatch.setattr(_os, "rename", real_rename)
+
+    assert mgr.all_steps() == [1]            # step 2 never published
+    step, got, _, extra = mgr.restore_latest_valid(params)
+    assert step == 1 and extra == {"cursor": 1}
+    np.testing.assert_array_equal(got["w"], params["w"])
+    # and with nothing published at all, the failure is typed
+    empty = CheckpointManager(str(tmp_path / "empty"), async_write=False)
+    with pytest.raises(faults.CheckpointCorruptFault):
+        empty.restore_latest_valid(params)
+
+
+def test_validate_failure_prints_op_history_diff():
+    """A plan-model violation must carry the expected-vs-observed diff
+    so chaos failures are diagnosable from the assertion message."""
+    rep = ExecReport("Qx", True, predicted_depth=4, predicted_refreshes=0,
+                     budget_levels=12, measured_depth=30, refreshes=2,
+                     launches=7, muls=9)
+    rep.history.append({"stage": "where", "mul": 9, "add": 3, "rotate": 1,
+                        "launches": 7, "refresh": 2, "max_depth": 30})
+    with pytest.raises(AssertionError) as ei:
+        rep.validate()
+    msg = str(ei.value)
+    assert "op-history diff for Qx" in msg
+    assert "predicted=4" in msg and "measured=30" in msg
+    assert "where" in msg                    # per-stage table included
+
+
+def test_recovered_report_skips_plan_model_validation():
+    rep = ExecReport("Qx", True, predicted_depth=4, predicted_refreshes=0,
+                     budget_levels=12, measured_depth=30, refreshes=2)
+    rep.recoveries.append({"kind": "overflow", "action": "refresh-and-retry"})
+    rep.validate()                           # incomparable history: no raise
+    rep2 = ExecReport("Qy", True, predicted_depth=4, predicted_refreshes=0,
+                      budget_levels=12, measured_depth=30, refreshes=2)
+    rep2.recoveries.append({"kind": "straggler", "action": "reshard 4->2"})
+    with pytest.raises(AssertionError):      # straggler does NOT exempt
+        rep2.validate()
