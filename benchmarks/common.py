@@ -36,6 +36,22 @@ def paper_costs(quick: bool = False):
     return extrapolate_costs(measured, 32768, 30)
 
 
+def op_costs(quick: bool = False) -> dict:
+    """Per-op cost dict every benchmark prices ledgers with.
+
+    One loader for all of benchmarks/: the calibrated paper-parameter
+    costs from results/op_costs.json (via paper_costs) plus the
+    interconnect gather price the 2-D limb-sharded ledger consults —
+    the JSON file may override `gather_byte`, otherwise the engine
+    default applies.
+    """
+    from repro.engine.sharded import GATHER_BYTE_SECONDS
+
+    d = paper_costs(quick).as_dict()
+    d.setdefault("gather_byte", GATHER_BYTE_SECONDS)
+    return d
+
+
 SEAL_EQ_MS_PER_SLOT = 0.09   # paper Table 4: NSHEDB equality on SEAL
 
 

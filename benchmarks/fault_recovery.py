@@ -27,12 +27,13 @@ from repro.engine.workload import WorkloadCache
 from repro.runtime import faults
 from repro.runtime.elastic import StragglerDetector
 
-from .common import save_json, table
+from .common import op_costs, save_json, table
 
 MIX = list(Q.PLAN_EXECUTABLE)             # Q1, Q6, Q12, Q19
 MULTIBLOCK = NoiseProfile(n=64, t=65537, k=30)
-COSTS = {"mul": 0.05, "mul_plain": 0.055, "mul_scalar": 0.002,
-         "add": 0.0015, "rotate": 0.105, "refresh": 44.0}
+# Calibrated per-op seconds: straggler thresholds are relative to the
+# fleet median, so any consistent cost scale gives the same exclusions.
+COSTS = op_costs(quick=True)
 MAX_OVERHEAD = 2.0
 
 

@@ -21,6 +21,12 @@ SF=1.0 ciphertext arithmetic in-process:
 Emits results/sharded_scan.json.  Full mode asserts the §5 acceptance
 bar: > 1.5x modeled speedup at 4 shards; smoke mode (--smoke / quick)
 runs 8 blocks at shards (1, 2) and asserts speedup >= 1.
+
+`--limb-shards M` additionally sweeps the model (RNS limb) axis of the
+2-D mesh on the filtered arm — limb-local ops divide by the limb
+factor, the all-gathered key-switch digits are charged per byte — and
+emits results/limb_sharding.json (speedup > 1 required at M=2, >= 1 in
+smoke mode).
 """
 from __future__ import annotations
 
@@ -35,7 +41,7 @@ from repro.engine.planner import Planner
 from repro.engine.schema import ColumnSpec, TableSchema
 from repro.engine.storage import Database
 
-from .common import fmt_s, paper_costs, save_json, table
+from .common import fmt_s, op_costs, save_json, table
 
 SF1_ROWS = 6_001_215          # TPC-H lineitem at scale factor 1.0
 T = 65537
@@ -142,9 +148,41 @@ def _weak_scaling(bk, shard_counts, costs, blocks_per_shard: int) -> list[dict]:
     return rows
 
 
-def main(quick: bool = False) -> str:
+def _limb_sweep(db, data, costs, limb_shards: int, quick: bool) -> list[dict]:
+    """Model-axis strong scaling: same table, the k RNS limbs split over
+    M devices.  Decrypt must stay byte-identical at every M (the gather
+    key-switch preserves the summation order exactly); the ledger prices
+    limb-local work at 1/limb_factor and charges the all-gathered
+    key-switch digits at gather_byte * (M-1)/M per byte."""
+    plan = _arms()[1]                      # filtered arm: cheapest scan
+    oracle = _oracle(plan, data)
+    sweep = sorted({1, 2, limb_shards} & set(range(1, limb_shards + 1)))
+    rows, base = [], None
+    for m in sweep:
+        pl = Planner(db, shards=1, limb_shards=m)
+        got = run_via_plan(pl, plan)
+        _check_same(got, oracle, f"limb sweep @ {m} vs oracle")
+        if base is None:
+            base = got
+        _check_same(got, base, f"limb sweep @ {m} vs limb_shards=1")
+        ctx = pl.shard_ctx
+        rows.append({
+            "limb_shards": m,
+            "modeled_s": round(ctx.modeled_seconds(costs), 2),
+            "limb_factor": ctx.limb_factor(),
+            "gathers": ctx.gathers,
+            "gather_bytes": int(ctx.gather_bytes),
+            "limb_local_bytes": int(ctx.limb_local_bytes),
+        })
+    t1 = rows[0]["modeled_s"]
+    for r in rows:
+        r["speedup"] = round(t1 / r["modeled_s"], 2)
+    return rows
+
+
+def main(quick: bool = False, limb_shards: int | None = None) -> str:
     bk = MockBackend()
-    costs = paper_costs(quick).as_dict()
+    costs = op_costs(quick)
     shard_counts = (1, 2) if quick else (1, 2, 4, 8)
     nrows = 8 * bk.slots - 1000 if quick else SF1_ROWS
     db, data = _lineitem_db(bk, nrows)
@@ -184,6 +222,23 @@ def main(quick: bool = False) -> str:
     out += (f"modeled speedup at {max(shard_counts)} shards: "
             f"{fmt_s(strong[0]['modeled_s'])} -> "
             f"{fmt_s(strong[len(shard_counts) - 1]['modeled_s'])}\n")
+
+    if limb_shards is not None and limb_shards > 1:
+        limb_rows = _limb_sweep(db, data, costs, limb_shards, quick)
+        top = limb_rows[-1]
+        if quick:
+            assert top["speedup"] >= 1.0, \
+                f"smoke: limb axis slowdown: {limb_rows}"
+        else:
+            assert top["speedup"] > 1.0, \
+                f"acceptance: no limb-axis speedup: {limb_rows}"
+        save_json("limb_sharding.json", {
+            "profile": {"n": bk.slots, "t": bk.t, "k": bk.profile.k},
+            "rows": nrows, "quick": quick,
+            "gather_byte_s": costs["gather_byte"],
+            "sweep": limb_rows,
+        })
+        out += table(limb_rows, "limb sharding (model axis, filtered arm)")
     return out
 
 
@@ -192,4 +247,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="8-block table, shards (1, 2): CI smoke mode")
-    print(main(quick=ap.parse_args().smoke))
+    ap.add_argument("--limb-shards", type=int, default=None, metavar="M",
+                    help="also sweep the model (RNS limb) axis up to M "
+                         "and emit results/limb_sharding.json")
+    a = ap.parse_args()
+    print(main(quick=a.smoke, limb_shards=a.limb_shards))

@@ -31,13 +31,15 @@ seeded numpy Generator so tests are reproducible.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 
-from .limbops import LimbOps
+from .limbops import LimbLocalOps, LimbOps
 from .mathutil import centered, crt_reconstruct
 from .noise import NoiseModel
 from .params import HEParams
@@ -116,6 +118,38 @@ class Keys:
     gks: dict[int, KSwitchKey]   # galois element -> key
 
 
+@functools.partial(jax.jit, static_argnames=("mesh", "data_sharded"))
+def _ksw_gathered(poly, kb, ka, q, psi, ipsi, ninv, *, mesh, data_sharded):
+    """shard_map key-switch on a ("data", "model") mesh (see
+    BFVContext.kswitch_gathered for the math).  poly is (B, k, n); the
+    key is sharded on its *output*-limb axis 1, the tables on their limb
+    axis, and the batch on "data" when B divides the data axis (a
+    replicated batch — singletons, odd sizes — uses a None spec; the
+    digit gather over "model" is the only hand-placed collective either
+    way)."""
+    P = jax.sharding.PartitionSpec
+    dspec = "data" if data_sharded else None
+
+    def body(p, kbl, kal, ql, psil, ipsil, ninvl):
+        half = ql // 2
+        cent = p - ql[:, None] * (p > half[:, None])                # (B, kL, n)
+        gath = jax.lax.all_gather(cent, "model", axis=1, tiled=True)  # (B, k, n)
+        digits = gath[:, :, None, :] % ql[None, None, :, None]      # (B, k, kL, n)
+        ops = LimbLocalOps(ql, psil, ipsil, ninvl)
+        d_ntt = ops.ntt(digits)
+        acc_b = jnp.sum(ops.mul(d_ntt, kbl[None]), axis=1) % ql[:, None]
+        acc_a = jnp.sum(ops.mul(d_ntt, kal[None]), axis=1) % ql[:, None]
+        return ops.intt(acc_b), ops.intt(acc_a)
+
+    specs = (P(dspec, "model", None), P(None, "model", None),
+             P(None, "model", None), P("model"), P("model", None),
+             P("model", None), P("model"))
+    return shard_map(body, mesh=mesh, in_specs=specs,
+                     out_specs=(P(dspec, "model", None),
+                                P(dspec, "model", None)))(
+        poly, kb, ka, q, psi, ipsi, ninv)
+
+
 class BFVContext:
     """Binds a parameter set; owns jitted primitives and key material ops.
 
@@ -156,6 +190,7 @@ class BFVContext:
         self._encrypt_j = jax.jit(self._encrypt_impl)
         self._decrypt_j = jax.jit(self._decrypt_impl)
         self._mul_j = jax.jit(self._mul_impl)
+        self._mul_tensor_j = jax.jit(self._mul_tensor_impl)
         self._mul_plain_j = jax.jit(self._mul_plain_impl)
         self._apply_galois_j = jax.jit(self._apply_galois_impl, static_argnums=1)
 
@@ -366,13 +401,25 @@ class BFVContext:
         return out
 
     # ------------------------------------------------------- ct-ct multiply
-    def mul(self, a, b, rlk: KSwitchKey):
-        data = self._mul_j(a.data, b.data, rlk.b, rlk.a)
+    def mul(self, a, b, rlk: KSwitchKey, mesh=None):
+        """HPS tensor + relinearization.  With a 2-D query mesh the
+        relin key-switch all-gathers its decomposition digits over the
+        mesh "model" axis (engine/sharded.py) — byte-identical output,
+        different collective structure."""
+        if mesh is None:
+            data = self._mul_j(a.data, b.data, rlk.b, rlk.a)
+        else:
+            r0, r1, r2 = self._mul_tensor_j(a.data, b.data)
+            ks0, ks1 = self.kswitch_gathered(r2, rlk, mesh)
+            q = self.qQ[:, None]
+            data = jnp.stack([(r0 + ks0) % q, (r1 + ks1) % q], axis=-3)
         nz = self.noise_model
         return self._like(self._pick(a, b), data,
                           nz.keyswitch(nz.mul(a.noise, b.noise)))
 
-    def _mul_impl(self, da, db, rlk_b, rlk_a):
+    def _mul_tensor_impl(self, da, db):
+        """Steps 1-4 of the HPS multiply: the degree-2 tensor scaled back
+        to base Q, before relinearization."""
         p = self.params
         qQ, qP = self.qQ, self.qP
         lq, lp = self.limb_q, self.limb_p
@@ -403,11 +450,14 @@ class BFVContext:
             rem_p = self._fbc(rem_q, self.c_qp, qQ, qP)
             r_p = ((ep * p.t - rem_p) % qP[:, None]) * self.qinv_p[:, None] % qP[:, None]
             rs.append(self._fbc(r_p, self.c_pq, qP, qQ))       # 4. back to base Q
+        return rs[0], rs[1], rs[2]
+
+    def _mul_impl(self, da, db, rlk_b, rlk_a):
+        r0, r1, r2 = self._mul_tensor_impl(da, db)
         # 5. relinearize r2
-        ks0, ks1 = self._kswitch_inner(rs[2], rlk_b, rlk_a)
-        c0 = (rs[0] + ks0) % qQ[:, None]
-        c1 = (rs[1] + ks1) % qQ[:, None]
-        return jnp.stack([c0, c1], axis=-3)
+        ks0, ks1 = self._kswitch_inner(r2, rlk_b, rlk_a)
+        q = self.qQ[:, None]
+        return jnp.stack([(r0 + ks0) % q, (r1 + ks1) % q], axis=-3)
 
     # --------------------------------------------------------- key switch
     def _kswitch_inner(self, poly, ksk_b, ksk_a):
@@ -423,19 +473,46 @@ class BFVContext:
         acc_a = jnp.sum(lq.mul(d_ntt, ksk_a), axis=-3) % q
         return lq.intt(acc_b), lq.intt(acc_a)
 
+    def kswitch_gathered(self, poly, ksk: KSwitchKey, mesh):
+        """`_kswitch_inner` on a 2-D ("data", "model") mesh.
+
+        Each device holds a (kL = k/M)-limb slice of `poly` and the
+        output-limb slice of the key (KSwitchKey axis 1 is the output
+        limb; axis 0, the digit, stays whole per device).  The centered
+        digits — k*n int64 per block, the *minimal* cross-limb payload —
+        all-gather along "model"; each device then reduces the gathered
+        digits mod its local moduli, NTTs with its local tables,
+        multiplies with its key slice, folds over the full digit axis
+        and INTTs.  Same summation order, exact int64 throughout, so the
+        output is byte-identical to the fused single-device path.
+        """
+        lead = poly.shape[:-2]
+        B = math.prod(lead) if lead else 1
+        p3 = poly.reshape((B,) + poly.shape[-2:])
+        data_ax = mesh.shape.get("data", 1)
+        data_sharded = B > 1 and B % data_ax == 0
+        b, a = _ksw_gathered(p3, ksk.b, ksk.a, self.qQ, self.psiQ,
+                             self.ipsiQ, self.ninvQ, mesh=mesh,
+                             data_sharded=data_sharded)
+        return b.reshape(poly.shape), a.reshape(poly.shape)
+
     # ------------------------------------------------------------ rotation
     def _apply_galois_impl(self, data, g: int):
         src, sign = self._galois_tabs[g]
         return (sign * data[..., src]) % self.qQ[:, None]
 
-    def apply_galois(self, ct, g: int, gk: KSwitchKey):
+    def apply_galois(self, ct, g: int, gk: KSwitchKey, mesh=None):
         rot = self._apply_galois_j(ct.data, g)
-        ks0, ks1 = self._kswitch_inner(rot[..., 1, :, :], gk.b, gk.a)
+        if mesh is None:
+            ks0, ks1 = self._kswitch_inner(rot[..., 1, :, :], gk.b, gk.a)
+        else:
+            ks0, ks1 = self.kswitch_gathered(rot[..., 1, :, :], gk, mesh)
         c0 = (rot[..., 0, :, :] + ks0) % self.qQ[:, None]
         return self._like(ct, jnp.stack([c0, ks1], axis=-3),
                           self.noise_model.rotate(ct.noise))
 
-    def rotate_rows(self, ct, step: int, gks: dict[int, KSwitchKey]):
+    def rotate_rows(self, ct, step: int, gks: dict[int, KSwitchKey],
+                    mesh=None):
         """Rotate both rows left by `step` (decomposed into power-of-two hops)."""
         p = self.params
         step %= p.row
@@ -444,14 +521,14 @@ class BFVContext:
         while step:
             if step & 1:
                 g = p.rot_gs[hop]
-                out = self.apply_galois(out, g, gks[g])
+                out = self.apply_galois(out, g, gks[g], mesh=mesh)
             step >>= 1
             hop <<= 1
         return out
 
-    def swap_rows(self, ct, gks: dict[int, KSwitchKey]):
+    def swap_rows(self, ct, gks: dict[int, KSwitchKey], mesh=None):
         g = self.params.rowswap_g
-        return self.apply_galois(ct, g, gks[g])
+        return self.apply_galois(ct, g, gks[g], mesh=mesh)
 
     # --------------------------------------------------- slot-level helpers
     def sum_slots(self, ct, gks: dict[int, KSwitchKey]):

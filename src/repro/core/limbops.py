@@ -88,6 +88,48 @@ def resolve_backend(backend: str | None, primes) -> str:
     return b
 
 
+class LimbLocalOps:
+    """Per-device limb-slice primitives for shard_map bodies.
+
+    Inside a `("data", "model")` shard_map region each device holds a
+    contiguous (kL = k/M)-limb slice of every polynomial plus the
+    matching slice of the twiddle/modulus tables, so the pointwise and
+    NTT primitives are plain limb-major math over (..., kL, n) — zero
+    communication (the all-gather of key-switch digits happens *before*
+    these run; see core/bfv.py: kswitch_gathered).  Always ref-backed:
+    Pallas interpret mode cannot trace inside shard_map, and the ref
+    path is bit-identical anyway.
+    """
+
+    def __init__(self, q, psi, ipsi, ninv):
+        self.q, self.psi, self.ipsi, self.ninv = q, psi, ipsi, ninv
+        self.kl, self.n = psi.shape
+
+    def _rows(self, a):
+        """(..., kL, n) -> (B*kL, n) plus the batch factor B."""
+        B = 1
+        for d in a.shape[:-2]:
+            B *= d
+        return a.reshape(B * self.kl, self.n), B
+
+    def _tile(self, tab, B: int):
+        return jnp.concatenate([tab] * B, axis=0) if B > 1 else tab
+
+    def mul(self, a, b):
+        return (a * b) % self.q[:, None]
+
+    def ntt(self, a):
+        ar, B = self._rows(a)
+        return nttm.ntt_ref(ar, self._tile(self.psi, B),
+                            self._tile(self.q, B)).reshape(a.shape)
+
+    def intt(self, a):
+        ar, B = self._rows(a)
+        return nttm.intt_ref(ar, self._tile(self.ipsi, B),
+                             self._tile(self.ninv, B),
+                             self._tile(self.q, B)).reshape(a.shape)
+
+
 class LimbOps:
     """Pointwise + NTT primitives for one RNS base, kernel- or ref-backed."""
 

@@ -145,6 +145,17 @@ class _BackendBase:
         dist = any(self._nblocks_phys(c) > 1 for c in cts)
         self._charge_units(field, units, phys, dist)
 
+    def _charge_gather(self, *cts, mult: int = 1) -> None:
+        """Mirror a key-switch digit all-gather into the 2-D shard
+        ledger (model-axis bytes, ShardContext.record_gather): one unit
+        per physical block lane per key-switch.  No-op at limb_shards=1,
+        so 1-D ledgers stay byte-identical; never touches OpStats, so
+        op counts stay backend- and mesh-independent."""
+        ctx = self.shard_ctx
+        if ctx is None or getattr(ctx, "limb_shards", 1) <= 1 or mult <= 0:
+            return
+        ctx.record_gather(max(self._nblocks_phys(c) for c in cts) * mult)
+
     def _budget(self, noise):
         return self.model.budget(noise)
 
@@ -257,7 +268,14 @@ class BFVBackend(_BackendBase):
         self.keys: Keys = self.ctx.keygen()
         self.enc = BatchEncoder(params)
         self.model = self.ctx.noise_model
+        self.limbs = params.k          # RNS tower height (model-axis extent)
         self._depth: dict[int, int] = {}
+
+    def _limb_mesh(self):
+        """The active context's 2-D mesh iff key-switches should
+        all-gather over a real model axis (engine/sharded.py)."""
+        ctx = self.shard_ctx
+        return ctx.limb_mesh if ctx is not None else None
 
     def _nblocks(self, ct) -> int:
         return ct.nblocks if isinstance(ct, CiphertextBatch) else 1
@@ -284,7 +302,8 @@ class BFVBackend(_BackendBase):
         mesh is attached — uneven tables compile to one even launch."""
         batch = self.ctx.stack_cts(blocks)
         ctx = self.shard_ctx
-        if ctx is not None and ctx.shards > 1 and len(blocks) > 1:
+        if (ctx is not None and len(blocks) > 1
+                and (ctx.shards > 1 or ctx.limb_mesh is not None)):
             from .sharded import pad_to, place_batch
             import jax.numpy as jnp
             nphys = pad_to(len(blocks), ctx.shards)
@@ -407,7 +426,8 @@ class BFVBackend(_BackendBase):
             b = self._maybe_refresh(b, self.model.keyswitch(
                 self.model.mul(a.noise, b.noise)), "mul")
         self._charge("mul", a, b)
-        out = self.ctx.mul(a, b, self.keys.rlk)
+        self._charge_gather(a, b)
+        out = self.ctx.mul(a, b, self.keys.rlk, mesh=self._limb_mesh())
         return self._set_d(out, max(self._d(a), self._d(b)) + 1)
 
     def mul_plain(self, a, vec):
@@ -459,12 +479,19 @@ class BFVBackend(_BackendBase):
     # -- data movement ---------------------------------------------------
     def rotate(self, a, step: int):
         """Rotate rows (2 x n/2 layout) left by step."""
-        self._charge("rotate", a, mult=bin(step % (self.slots // 2)).count("1"))
-        return self._set_d(self.ctx.rotate_rows(a, step, self.keys.gks), self._d(a))
+        hops = bin(step % (self.slots // 2)).count("1")
+        self._charge("rotate", a, mult=hops)
+        self._charge_gather(a, mult=hops)      # one kswitch per pow-2 hop
+        return self._set_d(
+            self.ctx.rotate_rows(a, step, self.keys.gks,
+                                 mesh=self._limb_mesh()), self._d(a))
 
     def swap_rows(self, a):
         self._charge("rotate", a)
-        return self._set_d(self.ctx.swap_rows(a, self.keys.gks), self._d(a))
+        self._charge_gather(a)
+        return self._set_d(
+            self.ctx.swap_rows(a, self.keys.gks, mesh=self._limb_mesh()),
+            self._d(a))
 
 
 # ---------------------------------------------------------------------------
@@ -499,6 +526,7 @@ class MockBackend(_BackendBase):
         self.t = self.profile.t
         self.slots = self.profile.n
         self.model = NoiseModel(self.profile)
+        self.limbs = self.profile.k    # RNS tower height (model-axis extent)
         self.kernel_reduce = kernel_reduce
 
     def _nblocks(self, ct) -> int:
@@ -627,6 +655,7 @@ class MockBackend(_BackendBase):
             b = self._maybe_refresh(
                 b, self.model.keyswitch(self.model.mul(a.noise, b.noise)), "mul")
         self._charge("mul", a, b)
+        self._charge_gather(a, b)
         return MockCipher((a.vec * b.vec) % self.t,
                           self.model.keyswitch(self.model.mul(a.noise, b.noise)),
                           self._track_depth(max(a.depth, b.depth) + 1),
@@ -699,7 +728,9 @@ class MockBackend(_BackendBase):
     # -- data movement ---------------------------------------------------
     def rotate(self, a, step: int):
         """Row-rotation semantics matching the BFV 2 x n/2 slot layout."""
-        self._charge("rotate", a, mult=bin(step % (self.slots // 2)).count("1"))
+        hops = bin(step % (self.slots // 2)).count("1")
+        self._charge("rotate", a, mult=hops)
+        self._charge_gather(a, mult=hops)
         half = self.slots // 2
         vec = np.concatenate([np.roll(a.vec[..., :half], -step, axis=-1),
                               np.roll(a.vec[..., half:], -step, axis=-1)], axis=-1)
@@ -707,6 +738,7 @@ class MockBackend(_BackendBase):
 
     def swap_rows(self, a):
         self._charge("rotate", a)
+        self._charge_gather(a)
         half = self.slots // 2
         vec = np.concatenate([a.vec[..., half:], a.vec[..., :half]], axis=-1)
         return MockCipher(vec, self.model.rotate(a.noise), a.depth, self._live(a))
@@ -725,6 +757,7 @@ class MockBackend(_BackendBase):
         dist = phys > 1
         self._charge_units("add", steps * nb, steps * phys, dist)
         self._charge_units("rotate", steps * nb, steps * phys, dist)
+        self._charge_gather(a, mult=steps)     # ledger parity w/ looped path
         self.stats.launches += 1
         noise = a.noise
         for _ in range(steps):

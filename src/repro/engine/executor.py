@@ -377,9 +377,15 @@ class Executor:
             "detail": f.detail})
 
     def _straggler_round(self, det, costs: dict, ctx0, led0: float) -> None:
-        """Elastic loop: per-shard heartbeats from this run's cost-ledger
-        delta, detector evaluation, and reshard away exclusions.  A
-        fleet with no viable survivor mesh raises a typed fault."""
+        """Elastic loop: per-worker heartbeats from this run's cost-
+        ledger delta, detector evaluation, and reshard away exclusions.
+        Workers enumerate the flattened 2-D grid (id = data_row *
+        limb_shards + limb_col); either mesh axis shrinks independently:
+        a limb *column* whose every data row is flagged is a model-axis
+        exclusion (elastic_limb_plan), anything else shrinks the data
+        axis by the flagged rows (elastic_scan_plan) — at limb_shards=1
+        this reduces exactly to the 1-D policy.  A fleet with no viable
+        survivor mesh raises a typed fault."""
         pl = self.pl
         ctx = pl.shard_ctx
         plan = faults.active()
@@ -387,21 +393,31 @@ class Executor:
         base = led0 if ctx is ctx0 else 0.0
         for worker, t in ctx.heartbeats(costs, slow, baseline=base).items():
             det.report(worker, t)
-        excluded = [w for w in det.evaluate() if w < ctx.shards]
+        excluded = [w for w in det.evaluate() if w < ctx.workers]
         if not excluded:
             return
+        M = ctx.limb_shards
+        flagged = set(excluded)
+        limb_cols = [m for m in range(M)
+                     if all(d * M + m in flagged for d in range(ctx.shards))]
+        if M > 1 and limb_cols and len(limb_cols) < M:
+            axis, drop = "model", limb_cols
+        else:
+            axis, drop = "data", sorted({w // M for w in excluded})
         try:
-            new_ctx = ctx.reshard(excluded)
+            new_ctx = ctx.reshard(drop, axis=axis)
         except RuntimeError as e:
             raise faults.StragglerFault(
                 f"{self.report.name}: straggler exclusion {excluded} "
                 f"leaves no viable scan mesh: {e}",
                 query=self.report.name, stage="straggler",
-                detail={"excluded": excluded}) from e
+                detail={"excluded": excluded, "axis": axis}) from e
         pl.shard_ctx = new_ctx
         self.report.recoveries.append({
-            "kind": "straggler", "excluded": excluded,
-            "action": f"reshard {ctx.shards}->{new_ctx.shards}"})
+            "kind": "straggler", "excluded": excluded, "axis": axis,
+            "action": (f"reshard {axis} "
+                       f"{ctx.shards}x{ctx.limb_shards}->"
+                       f"{new_ctx.shards}x{new_ctx.limb_shards}")})
 
     # ------------------------------------------------------- compilation
     def _split_group_in(self, where, group_cols):
@@ -681,18 +697,24 @@ class Executor:
 
 
 def run_via_plan(planner, plan: QueryPlan, validate: bool = True,
-                 shards: int | None = None) -> dict:
+                 shards: int | None = None,
+                 limb_shards: int | None = None) -> dict:
     """Execute a QueryPlan through the compiled operator DAG.  Returns
     the same decrypted result structure as the legacy `run_qN` body.
 
     `shards=N` runs this plan's scan phase sharded over N mesh data
+    lanes and `limb_shards=M` shards the k RNS limbs over M model-axis
     lanes (engine/sharded.py) without mutating the planner's default:
     the context is installed for this call only."""
-    if shards is None:
+    if shards is None and limb_shards is None:
         return Executor(planner).run(plan, validate=validate)
     from .sharded import make_shard_context
     prev = getattr(planner, "shard_ctx", None)
-    planner.shard_ctx = make_shard_context(shards)
+    planner.shard_ctx = make_shard_context(
+        shards if shards is not None else 1,
+        limb_shards=limb_shards if limb_shards is not None else 1,
+        limbs=getattr(planner.bk, "limbs", None),
+        ring_n=getattr(planner.bk, "slots", 0))
     try:
         return Executor(planner).run(plan, validate=validate)
     finally:

@@ -78,19 +78,26 @@ class PlanReport:
 class Planner:
     def __init__(self, db: Database, optimized: bool = True, cache=None,
                  shards: int | None = None, mesh="auto",
-                 guards: bool = False):
+                 guards: bool = False, limb_shards: int | None = None):
         from .workload import WorkloadCache
         self.db = db
         self.bk = db.bk
         self.optimized = optimized
         self.budget_levels = noise_budget_levels(self.bk)
-        # Sharded scan execution (DESIGN §4): shards=N partitions every
-        # stacked block column over the mesh "data" axis.  The executor
-        # and evaluator activate this context around execution; None
-        # keeps the classic single-device path.
-        if shards is not None and shards >= 1:
+        # Sharded execution (DESIGN §4): shards=N partitions every
+        # stacked block column over the mesh "data" axis; limb_shards=M
+        # partitions each block's k RNS limbs over the "model" axis
+        # (key-switches all-gather their digits across it).  The
+        # executor and evaluator activate this context around
+        # execution; None/None keeps the classic single-device path.
+        if (shards is not None and shards >= 1) or (
+                limb_shards is not None and limb_shards >= 1):
             from .sharded import make_shard_context
-            self.shard_ctx = make_shard_context(shards, mesh)
+            self.shard_ctx = make_shard_context(
+                shards if shards is not None else 1, mesh,
+                limb_shards=limb_shards if limb_shards is not None else 1,
+                limbs=getattr(self.bk, "limbs", None),
+                ring_n=getattr(self.bk, "slots", 0))
         else:
             self.shard_ctx = None
         # Noise-aware mask store shared by every compiled mask: WHERE

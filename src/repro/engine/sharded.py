@@ -1,42 +1,65 @@
-"""Sharded scan execution over ciphertext blocks (DESIGN §4).
+"""Sharded query execution over ciphertext blocks and RNS limbs (DESIGN §4).
 
-Scan-first execution is embarrassingly parallel across ciphertext
-blocks: a stacked column is a `(nblocks, 2, k, n)` batch, and every
-mask-evaluation / combination / plaintext-mul step is block-local.
-This module makes that parallelism explicit:
+Two orthogonal axes of parallelism, mapped onto one 2-D
+`("data", "model")` mesh (launch/mesh.py: make_query_mesh):
 
-* `ShardContext` — the per-run distribution plan.  It carries the shard
-  count, an optional real `("data",)` mesh (launch/mesh.py:
-  make_scan_mesh), and a cost ledger that splits every charged op into
-  *distributed* units (lanes of a multi-block batch — these divide by
-  the shard count) vs *replicated* units (singleton ciphertexts and
-  post-fold reductions — these run on every shard or on one) plus the
-  psum-style fold collectives.  `modeled_seconds(costs)` prices the
-  ledger with measured per-op costs, which is how
-  `benchmarks/sharded_scan.py` produces SF=1.0 scaling curves on the
-  mock backend.
+* **data** — scan-first execution is embarrassingly parallel across
+  ciphertext blocks: a stacked column is a `(nblocks, 2, k, n)` batch,
+  and every mask-evaluation / combination / plaintext-mul step is
+  block-local.  Lanes partition over "data"; the block fold is the one
+  collective (a psum).
+
+* **model** — inside every block, the k RNS limbs are embarrassingly
+  parallel for all pointwise mul/add and NTT work (core/limbops.py
+  operates limb-by-limb), so limbs partition over "model" with zero
+  communication — except key-switching (relinearization after a ct-ct
+  multiply, and every Galois rotation), the only cross-limb step in
+  core/bfv.py: each device all-gathers the centered decomposition
+  digits along "model" before the gadget fold
+  (core/bfv.py: kswitch_gathered).
+
+This module owns the runtime plumbing:
+
+* `ShardContext` — the per-run distribution plan.  It carries both axis
+  sizes, an optional real mesh, and a 2-D cost ledger: *distributed*
+  units (lanes of a multi-block batch — divide by the data-shard
+  count), *replicated* units (singletons and post-fold reductions),
+  fold collectives, and — new with the model axis — *limb-local* bytes
+  (work that divides by the per-device limb count) vs *all-gather*
+  bytes (key-switch digit movement across "model").
+  `modeled_seconds(costs)` prices the ledger with measured per-op
+  costs; the limb factor k / ceil(k/M) divides every limb-local term
+  and the gather bytes pay `costs["gather_byte"]` seconds each.
+
+* Limb padding: when `k % limb_shards != 0` the limb axis pads up to
+  `limb_pad_to(k, M)` — padded limbs are pure ledger/placement
+  entities (a real mesh is only attached when k divides evenly; the
+  non-divisible case runs logical-only), so decrypt/OpStats stay
+  byte-identical to single-device regardless of M.
 
 * `activate(bk, ctx)` — installs the context on a backend for the
   duration of an execution.  While active, `stack_blocks` pads the lane
   count up to a multiple of `ctx.shards` with zero blocks (uneven
   tables compile to one even launch; `CiphertextBatch.live` records the
   logical count so fold/unstack/decrypt ignore the pads), batches are
-  device_put with a `("data", ...)` NamedSharding when a real mesh is
-  present, and every `OpStats` charge is mirrored into the ledger.
+  device_put with a `("data", None, "model", None)` NamedSharding when
+  a real mesh is present, and every `OpStats` charge is mirrored into
+  the ledger.
 
-* `sharded_fold(data, live, mesh)` — the one step that genuinely needs
-  a collective: the block-fold reduction runs shard-local over each
-  shard's lanes and combines partial sums with `jax.lax.psum` over
-  "data".  Pad lanes are excluded with a 0/1 lane-weight vector so the
-  whole thing stays a single launch.  The shard_map body runs under
-  `limbops.force_ref()` because Pallas interpret mode cannot trace
-  inside a shard_map region.
+* `sharded_fold(data, live, mesh)` — the data-axis collective: the
+  block-fold reduction runs shard-local over each shard's lanes and
+  combines partial sums with `jax.lax.psum` over "data" (limb slices
+  stay put — the fold is limb-local).  Pad lanes are excluded with a
+  0/1 lane-weight vector so the whole thing stays a single launch.
+  The shard_map body runs under `limbops.force_ref()` because Pallas
+  interpret mode cannot trace inside a shard_map region.
 
-Parity contract: padding lanes are exact additive identities for the
-fold and are never decrypted, `_count`/`_nblocks` keep returning *live*
-lane counts, and noise accounting never sees the pads — so OpStats,
-noise trajectories, refresh schedules and decrypted outputs are
-byte-identical to the single-device path (tests/test_sharded_exec.py).
+Parity contract: padding lanes (block or limb) are exact additive
+identities, `_count`/`_nblocks` keep returning *live* lane counts, and
+noise accounting never sees the pads — so OpStats, noise trajectories,
+refresh schedules and decrypted outputs are byte-identical to the
+single-device path for every (shards, limb_shards) combination
+(tests/test_sharded_exec.py, tests/test_limb_sharding.py).
 """
 from __future__ import annotations
 
@@ -49,8 +72,15 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 
 from ..core import limbops
-from ..launch.mesh import make_scan_mesh
-from ..runtime.elastic import elastic_scan_plan
+from ..launch.mesh import make_query_mesh, make_scan_mesh
+from ..runtime.elastic import elastic_limb_plan, elastic_scan_plan
+
+# Modeled interconnect cost of moving one byte in a model-axis
+# all-gather (~25 GB/s effective bisection — host-interconnect class).
+# Benchmarks override via costs["gather_byte"]; at paper parameters a
+# key-switch gather is ~0.3 ms/block against a ~15 s multiply, so the
+# limb axis is compute-dominated by 4+ orders of magnitude.
+GATHER_BYTE_SECONDS = 4e-11
 
 
 def pad_to(nblocks: int, shards: int) -> int:
@@ -60,13 +90,30 @@ def pad_to(nblocks: int, shards: int) -> int:
     return nblocks + (-nblocks) % shards
 
 
-class ShardContext:
-    """Distribution plan + cost ledger for one sharded execution."""
+def limb_pad_to(limbs: int, limb_shards: int) -> int:
+    """Limb count after padding k up to a multiple of the model axis.
 
-    def __init__(self, shards: int, mesh=None):
+    Unlike block lanes, a single limb still pads (every ciphertext has
+    the full k-limb tower) — the pad limbs are ledger/placement
+    entities only and never materialize in ciphertext data."""
+    if limb_shards <= 1:
+        return limbs
+    return limbs + (-limbs) % limb_shards
+
+
+class ShardContext:
+    """2-D distribution plan + cost ledger for one sharded execution."""
+
+    def __init__(self, shards: int, mesh=None, limb_shards: int = 1,
+                 limbs: int | None = None, ring_n: int = 0):
         if shards < 1:
             raise ValueError(f"shards must be >= 1, got {shards}")
-        self.shards = int(shards)
+        if limb_shards < 1:
+            raise ValueError(f"limb_shards must be >= 1, got {limb_shards}")
+        self.shards = int(shards)          # data axis
+        self.limb_shards = int(limb_shards)  # model axis
+        self.limbs = limbs                 # k of the backend's RNS tower
+        self.ring_n = int(ring_n)          # polynomial degree n
         self.mesh = mesh
         # op -> units that run data-parallel over the shard axis
         # (physical lanes of multi-block batches, pads included — pads
@@ -75,27 +122,88 @@ class ShardContext:
         # op -> units with no block axis to shard (singletons, folded
         # aggregates, refreshes of single blocks) — serial time.
         self.repl: dict[str, float] = {}
-        self.folds = 0  # cross-shard psum collectives issued
+        self.folds = 0         # cross-shard psum collectives issued
+        self.gathers = 0       # model-axis key-switch all-gathers issued
+        self.gather_bytes = 0.0      # digit bytes moved across "model"
+        self.limb_local_bytes = 0.0  # op bytes that stayed limb-local
 
+    # ----------------------------------------------------------- geometry
+    @property
+    def workers(self) -> int:
+        """Flattened worker count: id = data_row * limb_shards + limb."""
+        return self.shards * self.limb_shards
+
+    @property
+    def limb_mesh(self):
+        """The mesh iff it carries a real model axis to key-switch over."""
+        if (self.mesh is not None and self.limb_shards > 1
+                and "model" in self.mesh.axis_names):
+            return self.mesh
+        return None
+
+    def limb_factor(self) -> float:
+        """Speedup of limb-local work: k over the padded per-device limb
+        count, k / ceil(k/M) — exactly M when M divides k, less when
+        padding wastes device rows (k=30, M=4 -> 30/8 = 3.75x)."""
+        if self.limb_shards <= 1:
+            return 1.0
+        if not self.limbs:
+            return float(self.limb_shards)
+        kpad = limb_pad_to(self.limbs, self.limb_shards)
+        return self.limbs / (kpad // self.limb_shards)
+
+    def _block_bytes(self) -> int:
+        """Device bytes of one (2, kpad, n) int64 block (pads occupy
+        device rows, matching the physical-lane ledger philosophy)."""
+        if not self.limbs or not self.ring_n:
+            return 0
+        return 2 * limb_pad_to(self.limbs, self.limb_shards) * self.ring_n * 8
+
+    def _digit_bytes(self) -> int:
+        """Bytes of one (kpad, n) int64 centered-digit polynomial — the
+        payload a key-switch all-gathers along the model axis."""
+        if not self.limbs or not self.ring_n:
+            return 0
+        return limb_pad_to(self.limbs, self.limb_shards) * self.ring_n * 8
+
+    # ------------------------------------------------------------- ledger
     def record(self, field: str, units: float, distributed: bool) -> None:
         ledger = self.dist if distributed else self.repl
         ledger[field] = ledger.get(field, 0) + units
+        self.limb_local_bytes += units * self._block_bytes()
 
     def record_fold(self, live: int, phys: int) -> None:
         """A block-fold: shard-local adds + one psum tree combine."""
         local = max(phys - self.shards, 0) if self.shards > 1 else max(phys - 1, 0)
         if local:
             self.dist["add"] = self.dist.get("add", 0) + local
+            self.limb_local_bytes += local * self._block_bytes()
         self.folds += 1
 
+    def record_gather(self, units: float) -> None:
+        """A key-switch digit all-gather over "model": each unit moves
+        one block's (kpad, n) centered-digit polynomial.  Only called
+        when limb_shards > 1 — at M=1 there is nothing to gather and
+        the ledger must price identically to the 1-D context."""
+        self.gathers += 1
+        self.gather_bytes += units * self._digit_bytes()
+
     def modeled_seconds(self, costs: dict) -> float:
-        """Price the ledger: distributed time divides by the shard
-        count, replicated time and the psum combine tree do not."""
+        """Price the ledger: distributed time divides by the data-shard
+        count AND the limb factor (every op is limb-local), replicated
+        time divides by the limb factor alone, the psum tree moves
+        limb-sharded payloads, and the gather bytes pay the model-axis
+        interconnect — each device already holds its own 1/M slice, so
+        only (M-1)/M of every gathered byte crosses the wire."""
+        lf = self.limb_factor()
         dist = sum(n * costs.get(op, 0.0) for op, n in self.dist.items())
         repl = sum(n * costs.get(op, 0.0) for op, n in self.repl.items())
         tree = math.ceil(math.log2(self.shards)) if self.shards > 1 else 0
         coll = self.folds * tree * costs.get("add", 0.0)
-        return dist / self.shards + repl + coll
+        gather = (self.gather_bytes
+                  * costs.get("gather_byte", GATHER_BYTE_SECONDS)
+                  * (self.limb_shards - 1) / max(self.limb_shards, 1))
+        return dist / (self.shards * lf) + repl / lf + coll / lf + gather
 
     def heartbeats(self, costs: dict, slowdowns: dict | None = None,
                    baseline: float = 0.0) -> dict:
@@ -104,40 +212,76 @@ class ShardContext:
         The sharded scan is bulk-synchronous: every worker carries an
         equal share of the distributed units plus the replicated tail,
         so the modeled per-run seconds *are* each worker's step time.
-        `slowdowns` scales individual workers (real hardware skew, or
-        an injected straggler — runtime/faults.py); `baseline` subtracts
-        a prior `modeled_seconds` snapshot so a heartbeat reflects one
-        execution, not the context's lifetime.  The executor feeds these
-        to StragglerDetector.report after every sharded run.
+        Workers enumerate the flattened 2-D grid — id = data_row *
+        limb_shards + limb_col — so a straggling chip shows up on
+        exactly one (row, column) coordinate.  `slowdowns` scales
+        individual workers (real hardware skew, or an injected
+        straggler — runtime/faults.py); `baseline` subtracts a prior
+        `modeled_seconds` snapshot so a heartbeat reflects one
+        execution, not the context's lifetime.  The executor feeds
+        these to StragglerDetector.report after every sharded run.
         """
         step = max(self.modeled_seconds(costs) - baseline, 0.0)
         slow = slowdowns or {}
-        return {w: step * float(slow.get(w, 1.0)) for w in range(self.shards)}
+        return {w: step * float(slow.get(w, 1.0)) for w in range(self.workers)}
 
     def ledger_snapshot(self) -> dict:
-        return {"shards": self.shards, "dist": dict(self.dist),
-                "repl": dict(self.repl), "folds": self.folds,
+        return {"shards": self.shards, "limb_shards": self.limb_shards,
+                "dist": dict(self.dist), "repl": dict(self.repl),
+                "folds": self.folds, "gathers": self.gathers,
+                "gather_bytes": self.gather_bytes,
+                "limb_local_bytes": self.limb_local_bytes,
+                "limb_factor": self.limb_factor(),
                 "real_mesh": self.mesh is not None}
 
-    def reshard(self, excluded) -> "ShardContext":
-        """Shrink onto the surviving workers after straggler exclusion."""
+    def reshard(self, excluded, axis: str = "data") -> "ShardContext":
+        """Shrink one mesh axis onto the surviving workers after
+        straggler exclusion; the other axis is preserved.  `excluded`
+        holds data-row ids for axis="data", limb-column ids for
+        axis="model"."""
+        if axis == "model":
+            plan = elastic_limb_plan(self.limb_shards, excluded,
+                                     limbs=self.limbs)
+            return make_shard_context(self.shards,
+                                      limb_shards=plan["limb_shards"],
+                                      limbs=self.limbs, ring_n=self.ring_n)
         plan = elastic_scan_plan(self.shards, excluded)
-        return make_shard_context(plan["shards"])
+        return make_shard_context(plan["shards"],
+                                  limb_shards=self.limb_shards,
+                                  limbs=self.limbs, ring_n=self.ring_n)
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return (f"ShardContext(shards={self.shards}, "
+                f"limb_shards={self.limb_shards}, "
                 f"mesh={'real' if self.mesh is not None else None}, "
-                f"folds={self.folds})")
+                f"folds={self.folds}, gathers={self.gathers})")
 
 
-def make_shard_context(shards: int, mesh="auto") -> ShardContext:
+def make_shard_context(shards: int, mesh="auto", limb_shards: int = 1,
+                       limbs: int | None = None,
+                       ring_n: int = 0) -> ShardContext:
     """Build a context; 'auto' attaches a real mesh when the host has
     enough devices (e.g. under XLA_FLAGS=--xla_force_host_platform_
     device_count=8), else runs logical-only (padding + ledger, single
-    device) so shard plans stay testable on one chip."""
+    device) so shard plans stay testable on one chip.
+
+    The model axis gets real device placement only when the limb count
+    divides evenly (k % M == 0) — otherwise limb sharding stays a
+    ledger/padding model (the data axis may still get a real 1-D mesh),
+    keeping device arithmetic byte-exact with no materialized pad limbs.
+    """
     if mesh == "auto":
-        mesh = make_scan_mesh(shards) if 1 < shards <= len(jax.devices()) else None
-    return ShardContext(shards, mesh)
+        ndev = len(jax.devices())
+        real_limb_axis = (limb_shards > 1 and limbs is not None
+                          and limbs % limb_shards == 0)
+        if real_limb_axis and shards * limb_shards <= ndev:
+            mesh = make_query_mesh(shards, limb_shards)
+        elif 1 < shards <= ndev:
+            mesh = make_scan_mesh(shards)
+        else:
+            mesh = None
+    return ShardContext(shards, mesh, limb_shards=limb_shards,
+                        limbs=limbs, ring_n=ring_n)
 
 
 @contextlib.contextmanager
@@ -157,33 +301,41 @@ def activate(bk, ctx: ShardContext | None):
 
 
 def batch_sharding(mesh):
-    """NamedSharding placing the leading block axis on "data"."""
-    spec = jax.sharding.PartitionSpec("data", None, None, None)
+    """NamedSharding for a (nblocks, 2, k, n) batch: block lanes on
+    "data", RNS limbs on "model" when the mesh carries that axis."""
+    if "model" in mesh.axis_names:
+        spec = jax.sharding.PartitionSpec("data", None, "model", None)
+    else:
+        spec = jax.sharding.PartitionSpec("data", None, None, None)
     return jax.sharding.NamedSharding(mesh, spec)
 
 
 def place_batch(data, mesh):
-    """device_put a (nblocks, 2, k, n) batch across the scan mesh."""
+    """device_put a (nblocks, 2, k, n) batch across the query mesh."""
     return jax.device_put(data, batch_sharding(mesh))
 
 
 @functools.partial(jax.jit, static_argnames=("mesh",))
 def _fold_psum(data, weights, *, mesh):
     P = jax.sharding.PartitionSpec
+    limb = "model" if "model" in mesh.axis_names else None
 
     def body(d, w):
         local = jnp.sum(d * w[:, None, None, None], axis=0)
         return jax.lax.psum(local, "data")
 
-    return shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")),
-                     out_specs=P())(data, weights)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P("data", None, limb, None), P("data")),
+                     out_specs=P(None, limb, None))(data, weights)
 
 
 def sharded_fold(data, live: int, mesh):
     """Fold a padded (nphys, 2, k, n) batch: shard-local weighted sum,
-    then psum over the "data" axis.  Returns the raw (2, k, n) sum —
-    the caller reduces mod q (residues are < 2^30, so even ~190 int64
-    partial sums cannot overflow before the reduction)."""
+    then psum over the "data" axis; limb slices never move (the fold is
+    limb-local, so a 2-D mesh keeps the result sharded over "model").
+    Returns the raw (2, k, n) sum — the caller reduces mod q (residues
+    are < 2^30, so even ~190 int64 partial sums cannot overflow before
+    the reduction)."""
     nphys = data.shape[0]
     weights = (jnp.arange(nphys) < live).astype(data.dtype)
     with limbops.force_ref():

@@ -1,26 +1,43 @@
-"""Production mesh construction.
+"""Mesh construction.
 
 Defined as functions (never module-level constants) so importing this
 module does not touch jax device state — required because the dry-run
 must set XLA_FLAGS before the first jax initialization.
+
+Every factory routes through one `_device_mesh` helper (DESIGN §4): the
+first `prod(shape)` visible devices reshaped to the axis grid, so the
+production, host, scan and query meshes all agree on device ordering —
+a worker id on the flattened grid maps to the same physical device no
+matter which factory built the mesh.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import numpy as np
+
+
+def _device_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """The one mesh constructor: first prod(shape) devices, row-major."""
+    devs = jax.devices()
+    need = math.prod(shape)
+    if need > len(devs):
+        raise ValueError(f"mesh {shape} over {axes} needs {need} devices "
+                         f"but only {len(devs)} are visible")
+    return jax.sharding.Mesh(np.asarray(devs[:need]).reshape(shape), axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return _device_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever this host actually has — smoke tests and examples."""
-    n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",))
+    return _device_mesh((len(jax.devices()),), ("data",))
 
 
 def make_scan_mesh(shards: int):
@@ -32,8 +49,17 @@ def make_scan_mesh(shards: int):
     (runtime/elastic.py:elastic_scan_plan) can shrink the mesh after a
     straggler exclusion without restarting the process.
     """
-    devs = jax.devices()
-    if shards > len(devs):
-        raise ValueError(f"requested {shards} shards but only "
-                         f"{len(devs)} devices are visible")
-    return jax.sharding.Mesh(np.array(devs[:shards]), ("data",))
+    return _device_mesh((shards,), ("data",))
+
+
+def make_query_mesh(data: int, model: int):
+    """2-D ("data", "model") mesh for sharded query execution.
+
+    The data axis partitions ciphertext-block lanes (the PR-7 scan
+    axis); the model axis partitions the k RNS limbs of every
+    (nblocks, 2, k, n) batch, so NTT/pointwise ops run limb-local and
+    only the key-switch digit all-gather crosses it (engine/sharded.py,
+    core/bfv.py:kswitch_gathered).  Both axes shrink independently
+    under elastic re-planning (runtime/elastic.py).
+    """
+    return _device_mesh((data, model), ("data", "model"))

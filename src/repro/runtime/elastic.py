@@ -113,3 +113,23 @@ def elastic_scan_plan(shards: int, excluded) -> dict:
         d *= 2
     return {"shards": d, "workers": alive[:d], "axes": ("data",),
             "workers_idle": len(alive) - d, "excluded": sorted(dropped)}
+
+
+def elastic_limb_plan(limb_shards: int, excluded, limbs: int | None = None) -> dict:
+    """Re-shard plan for the model (RNS-limb) axis after exclusions.
+
+    Unlike the data axis there is no power-of-two constraint: the limb
+    padding rule (limb_pad_to in engine/sharded.py) absorbs any survivor
+    count M' by padding k up to the next multiple of M', so every
+    non-empty survivor set is viable and no worker idles.
+    """
+    dropped = set(excluded)
+    alive = [m for m in range(limb_shards) if m not in dropped]
+    if not alive:
+        raise RuntimeError("all limb shard workers excluded")
+    plan = {"limb_shards": len(alive), "workers": alive, "axes": ("model",),
+            "excluded": sorted(dropped)}
+    if limbs is not None:
+        m = len(alive)
+        plan["limb_pad"] = (m - limbs % m) % m
+    return plan

@@ -1,0 +1,262 @@
+"""2-D mesh execution: RNS limbs sharded over the model axis (DESIGN §4).
+
+Parity contract, now in two dimensions: running a compiled QueryPlan at
+any (shards, limb_shards) combination must be *byte-identical* to the
+single-device path — decrypted results, OpStats, noise trajectories and
+refresh schedules all match.  The data axis pads block lanes (PR 7);
+the model axis splits the k RNS limbs, runs NTT/pointwise work
+limb-local, and all-gathers the centered key-switch digits before the
+base-extension fold, preserving the exact summation order.
+
+Covered here:
+  * mock 2-D parity on every ported query x (1,1),(4,1),(1,2),(4,2)
+  * real RNS-BFV parity with the gathered key-switch (needs >= 2
+    devices; CI forces XLA_FLAGS=--xla_force_host_platform_device_count=8)
+  * limb-padding invariants when k % limb_shards != 0 (logical-only
+    placement, fractional limb factor)
+  * the 2-D cost ledger: limb-local vs all-gather byte accounting
+  * elastic_limb_plan + per-axis straggler re-sharding (either mesh
+    axis shrinks independently; the other is preserved)
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.noise import NoiseProfile
+from repro.engine import queries as Q, tpch
+from repro.engine.backend import MockBackend
+from repro.engine.executor import run_via_plan
+from repro.engine.planner import Planner
+from repro.engine.sharded import (ShardContext, limb_pad_to,
+                                  make_shard_context)
+from repro.runtime import faults
+from repro.runtime.elastic import StragglerDetector, elastic_limb_plan
+
+from test_sharded_exec import (_bfv_db, _bfv_oracle, _bfv_plans, _same,
+                               _stats_dict)
+
+MULTIBLOCK = NoiseProfile(n=64, t=65537, k=30)
+COSTS = {"mul": 0.05, "mul_plain": 0.055, "mul_scalar": 0.002,
+         "add": 0.0015, "rotate": 0.105, "refresh": 44.0}
+GRID = [(1, 1), (4, 1), (1, 2), (4, 2)]
+
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < 2, reason="needs >= 2 devices (XLA_FLAGS)")
+
+
+@pytest.fixture(scope="module")
+def mock_mb():
+    return MockBackend(MULTIBLOCK)
+
+
+@pytest.fixture(scope="module")
+def db_mb(mock_mb):
+    return tpch.load(mock_mb, tpch.Scale.tiny())
+
+
+def _run(db, qname, shards, limb_shards):
+    plan = Q.QUERIES[qname][0]()
+    pl = (Planner(db, optimized=True, shards=shards, limb_shards=limb_shards)
+          if shards is not None else Planner(db, optimized=True))
+    db.bk.stats.reset()
+    got = run_via_plan(pl, plan)
+    stats = _stats_dict(db.bk.stats.clone())
+    ledger = pl.shard_ctx.ledger_snapshot() if pl.shard_ctx else None
+    return got, stats, ledger
+
+
+# ---------------------------------------------------------------------------
+# 1. Mock 2-D parity grid.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def grid_runs(db_mb):
+    out = {}
+    for qn in Q.PLAN_EXECUTABLE:
+        out[(qn, None)] = _run(db_mb, qn, None, None)
+        for s, m in GRID:
+            out[(qn, (s, m))] = _run(db_mb, qn, s, m)
+    db_mb.bk.stats.reset()
+    return out
+
+
+@pytest.mark.parametrize("cell", GRID)
+@pytest.mark.parametrize("qname", Q.PLAN_EXECUTABLE)
+def test_mock_2d_parity_decrypt_identical(grid_runs, db_mb, qname, cell):
+    base, _, _ = grid_runs[(qname, None)]
+    got, _, _ = grid_runs[(qname, cell)]
+    _same(base, got)
+    _same(got, Q.QUERIES[qname][2](db_mb))
+
+
+@pytest.mark.parametrize("cell", GRID)
+@pytest.mark.parametrize("qname", Q.PLAN_EXECUTABLE)
+def test_mock_2d_parity_stats_identical(grid_runs, qname, cell):
+    """Neither padding lanes nor gather charges reach OpStats."""
+    _, base_stats, _ = grid_runs[(qname, None)]
+    _, stats, _ = grid_runs[(qname, cell)]
+    assert base_stats == stats
+
+
+@pytest.mark.parametrize("qname", Q.PLAN_EXECUTABLE)
+def test_mock_ledger_gathers_only_with_limb_axis(grid_runs, qname):
+    for s, m in GRID:
+        _, _, led = grid_runs[(qname, (s, m))]
+        assert led["limb_shards"] == m
+        if m > 1:
+            assert led["gathers"] > 0 and led["gather_bytes"] > 0
+            assert led["limb_local_bytes"] > 0
+        else:
+            assert led["gathers"] == 0 and led["gather_bytes"] == 0
+
+
+def test_ledger_models_limb_speedup(db_mb):
+    """Same query priced at limb_shards 1 vs 2: limb-local work halves,
+    the digit gather costs less than it saves."""
+    secs = {}
+    for m in (1, 2):
+        plan = Q.QUERIES["Q6"][0]()
+        pl = Planner(db_mb, shards=1, limb_shards=m)
+        run_via_plan(pl, plan)
+        secs[m] = pl.shard_ctx.modeled_seconds(COSTS)
+    assert secs[2] < secs[1]
+
+
+# ---------------------------------------------------------------------------
+# 2. Real RNS-BFV parity with the all-gathered key-switch.
+# ---------------------------------------------------------------------------
+
+@multidevice
+@pytest.mark.parametrize("pname", ["g1", "j1", "f1"])
+def test_bfv_micro_2d_parity(bfv_micro, pname):
+    bk = bfv_micro
+    db, data, pdata = _bfv_db(bk)
+    plan = next(p for p in _bfv_plans() if p.name == pname)
+    bk.stats.reset()
+    base = run_via_plan(Planner(db), plan)
+    base_stats = _stats_dict(bk.stats.clone())
+    for s, m in ((1, 2), (2, 2)):
+        if s * m > len(jax.devices()):
+            continue
+        pl = Planner(db, shards=s, limb_shards=m)
+        assert pl.shard_ctx.mesh is not None
+        assert "model" in pl.shard_ctx.mesh.axis_names
+        bk.stats.reset()
+        got = run_via_plan(pl, plan)
+        _same(base, got)
+        assert base_stats == _stats_dict(bk.stats.clone())
+        assert pl.shard_ctx.ledger_snapshot()["gather_bytes"] > 0
+    _same(base, _bfv_oracle(plan, data, pdata))
+
+
+# ---------------------------------------------------------------------------
+# 3. Limb-padding invariants.
+# ---------------------------------------------------------------------------
+
+def test_limb_pad_to():
+    assert limb_pad_to(12, 2) == 12
+    assert limb_pad_to(12, 4) == 12
+    assert limb_pad_to(30, 4) == 32     # k=30 pads to 8 limbs/device
+    assert limb_pad_to(30, 7) == 35
+    assert limb_pad_to(30, 1) == 30     # M=1: no padding
+    assert limb_pad_to(1, 4) == 4
+
+
+def test_limb_factor_fractional_when_padded():
+    # k=30, M=4: each device holds 8 padded limbs, 2 of 32 are dead,
+    # so the per-device speedup is 30/8 = 3.75, not 4.
+    ctx = ShardContext(1, limb_shards=4, limbs=30, ring_n=64)
+    assert ctx.limb_factor() == pytest.approx(30 / 8)
+    # divisible: exact M
+    assert ShardContext(1, limb_shards=2, limbs=30,
+                        ring_n=64).limb_factor() == pytest.approx(2.0)
+
+
+def test_non_divisible_limbs_get_no_real_mesh():
+    """k % M != 0 keeps placement logical-only: the ledger models the
+    padded tower but no device mesh is constructed."""
+    ctx = make_shard_context(1, limb_shards=4, limbs=30, ring_n=64)
+    assert ctx.mesh is None
+    assert ctx.limb_shards == 4 and ctx.workers == 4
+
+
+def test_shard_context_validates_limb_axis():
+    with pytest.raises(ValueError):
+        ShardContext(1, limb_shards=0)
+    with pytest.raises(ValueError):
+        ShardContext(0, limb_shards=2)
+
+
+def test_ledger_bytes_zero_without_geometry():
+    """Legacy ShardContext(N) calls (no limbs/ring_n) stay valid: byte
+    ledgers are inert, unit ledgers still work."""
+    ctx = ShardContext(2, limb_shards=2)
+    ctx.record("mul", 4, distributed=True)
+    ctx.record_gather(4)
+    assert ctx.gathers == 1 and ctx.gather_bytes == 0
+    assert ctx.limb_local_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# 4. Elastic planning + per-axis re-shard.
+# ---------------------------------------------------------------------------
+
+def test_elastic_limb_plan_any_survivor_count():
+    # no power-of-two constraint: padding absorbs any M'
+    plan = elastic_limb_plan(4, [2], limbs=30)
+    assert plan["limb_shards"] == 3 and plan["workers"] == [0, 1, 3]
+    assert plan["limb_pad"] == 0        # 30 % 3 == 0
+    plan = elastic_limb_plan(4, [0, 3], limbs=30)
+    assert plan["limb_shards"] == 2 and plan["limb_pad"] == 0
+    plan = elastic_limb_plan(7, [0, 1, 2], limbs=30)
+    assert plan["limb_shards"] == 4 and plan["limb_pad"] == 2
+
+
+def test_elastic_limb_plan_all_excluded_raises():
+    with pytest.raises(RuntimeError):
+        elastic_limb_plan(2, [0, 1])
+
+
+def test_reshard_axes_independent():
+    ctx = make_shard_context(4, limb_shards=2, limbs=30, ring_n=64)
+    shrunk_m = ctx.reshard([1], axis="model")
+    assert (shrunk_m.shards, shrunk_m.limb_shards) == (4, 1)
+    shrunk_d = ctx.reshard([1, 3], axis="data")
+    assert (shrunk_d.shards, shrunk_d.limb_shards) == (2, 2)
+
+
+@pytest.mark.parametrize("grid,slow,shape", [
+    # workers flatten as data_row * M + limb_col.  Straggler sets stay a
+    # fleet minority so the EWMA median tracks the healthy workers.
+    # 2x4 grid: limb column 2 = workers {2, 6} -> model axis 4 -> 3
+    ((2, 4), {2: 10.0, 6: 10.0}, (2, 3)),
+    # 4x2 grid: data row 3 = workers {6, 7} -> data axis 4 -> 2 (pow2)
+    ((4, 2), {6: 10.0, 7: 10.0}, (2, 2)),
+])
+def test_straggler_excludes_per_axis(db_mb, grid, slow, shape):
+    base, _, _ = _run(db_mb, "Q6", None, None)
+    pl = Planner(db_mb, optimized=True, shards=grid[0], limb_shards=grid[1])
+    det = StragglerDetector(threshold=2.0, patience=2, timeout_s=1e9)
+    pl.attach_straggler_detector(det, COSTS)
+    with faults.inject(faults.FaultPlan(straggler_slowdown=dict(slow))):
+        for _ in range(2):      # strikes reach patience on round 2
+            out = run_via_plan(pl, Q.QUERIES["Q6"][0]())
+            _same(base, out)
+    assert (pl.shard_ctx.shards, pl.shard_ctx.limb_shards) == shape
+    db_mb.bk.stats.reset()
+
+
+def test_straggler_recovery_logs_axis(db_mb):
+    from repro.engine.executor import Executor
+    pl = Planner(db_mb, optimized=True, shards=2, limb_shards=4)
+    det = StragglerDetector(threshold=2.0, patience=1, timeout_s=1e9)
+    pl.attach_straggler_detector(det, COSTS)
+    ex = Executor(pl)
+    with faults.inject(faults.FaultPlan(straggler_slowdown={2: 10.0, 6: 10.0})):
+        ex.run(Q.QUERIES["Q6"][0]())
+    rec = [r for r in ex.report.recoveries if r["kind"] == "straggler"]
+    assert rec and rec[-1]["axis"] == "model"
+    assert "2x4->2x3" in rec[-1]["action"]
+    db_mb.bk.stats.reset()
