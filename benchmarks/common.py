@@ -11,6 +11,48 @@ import numpy as np
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
+# Keys results/op_costs.json may carry on top of the measured OpCosts
+# fields; anything else is a typo or a schema drift and must fail loudly
+# rather than silently mis-price every ledger built on top of it.
+_EXTRA_COST_KEYS = ("gather_byte",)
+
+
+@functools.lru_cache(maxsize=None)
+def _calibration(quick: bool) -> tuple:
+    """Load (or measure) the calibration point: returns
+    (OpCosts, extras) where extras holds the optional overrides
+    (`gather_byte`) the JSON file may carry alongside the measured
+    fields.  Unknown or missing keys raise ValueError naming them —
+    a stale or hand-edited results/op_costs.json must never surface
+    as a cryptic TypeError (or worse, a silently wrong ledger)."""
+    import dataclasses
+
+    from repro.core.params import make_params
+    from repro.engine.baseline import OpCosts, measure_costs
+
+    cache = os.path.join(RESULTS, "op_costs.json")
+    if os.path.exists(cache):
+        with open(cache) as f:
+            d = json.load(f)
+        extras = {k: d.pop(k) for k in _EXTRA_COST_KEYS if k in d}
+        fields = {f.name for f in dataclasses.fields(OpCosts)}
+        required = {f.name for f in dataclasses.fields(OpCosts)
+                    if f.default is dataclasses.MISSING}
+        unknown, missing = sorted(set(d) - fields), sorted(required - set(d))
+        if unknown or missing:
+            raise ValueError(
+                f"{cache}: bad calibration schema — "
+                f"unknown keys {unknown}, missing keys {missing}; "
+                f"delete the file to re-measure")
+        return OpCosts(**d), extras
+    params = make_params(n=1024 if quick else 4096, t=65537, k=8)
+    measured = measure_costs(params, reps=2)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(cache, "w") as f:
+        json.dump(measured.__dict__, f)
+    return measured, {}
+
+
 @functools.lru_cache(maxsize=None)
 def paper_costs(quick: bool = False):
     """Per-op seconds at the paper's (n=32768, k=30).
@@ -19,20 +61,9 @@ def paper_costs(quick: bool = False):
     the analytic complexity model (see engine/baseline.py).  ~30 s once
     per process; cached to disk afterwards.
     """
-    from repro.core.params import make_params
-    from repro.engine.baseline import OpCosts, extrapolate_costs, measure_costs
+    from repro.engine.baseline import extrapolate_costs
 
-    cache = os.path.join(RESULTS, "op_costs.json")
-    if os.path.exists(cache):
-        with open(cache) as f:
-            d = json.load(f)
-        measured = OpCosts(**d)
-    else:
-        params = make_params(n=1024 if quick else 4096, t=65537, k=8)
-        measured = measure_costs(params, reps=2)
-        os.makedirs(RESULTS, exist_ok=True)
-        with open(cache, "w") as f:
-            json.dump(measured.__dict__, f)
+    measured, _ = _calibration(quick)
     return extrapolate_costs(measured, 32768, 30)
 
 
@@ -48,7 +79,8 @@ def op_costs(quick: bool = False) -> dict:
     from repro.engine.sharded import GATHER_BYTE_SECONDS
 
     d = paper_costs(quick).as_dict()
-    d.setdefault("gather_byte", GATHER_BYTE_SECONDS)
+    _, extras = _calibration(quick)
+    d["gather_byte"] = extras.get("gather_byte", GATHER_BYTE_SECONDS)
     return d
 
 

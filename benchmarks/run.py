@@ -18,9 +18,10 @@ def main() -> None:
 
     from . import (depth_model, fault_recovery, mask_fusion, packing_scaling,
                    primitive_ops, q6_breakdown, roofline, sharded_scan,
-                   storage, tpch_queries, workload_cache)
+                   static_verify, storage, tpch_queries, workload_cache)
     mods = {
         "depth_model": depth_model,
+        "static_verify": static_verify,
         "primitive_ops": primitive_ops,
         "storage": storage,
         "q6_breakdown": q6_breakdown,

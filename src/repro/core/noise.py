@@ -164,6 +164,12 @@ class NoiseModel:
         Elementwise over per-block noise vectors."""
         return -(v + 1.0)
 
+    def min_budget(self, v) -> float:
+        """Worst-lane remaining budget in bits as a scalar — the decrypt
+        -boundary headroom both the executing backends and the static
+        verifier report."""
+        return float(np.min(self.budget(v)))
+
     # --- planner-facing depth model (paper Table 3) ---
     def max_depth(self) -> int:
         """Supported sequential ct-ct multiplication depth from fresh."""

@@ -197,6 +197,12 @@ class _BackendBase:
         self.stats.max_depth = max(self.stats.max_depth, d)
         return d
 
+    def set_depth(self, ct, d: int) -> None:
+        """Restore a handle's tracked multiplicative chain length after
+        noise maintenance that must stay depth-neutral (the planner's
+        inject admission).  Never raises the run's max-depth watermark."""
+        ct.depth = d
+
     def fingerprint(self, ct) -> int | None:
         """Content hash of a ciphertext handle for at-rest integrity
         checks (WorkloadCache poison detection), or None when handles
@@ -406,6 +412,9 @@ class BFVBackend(_BackendBase):
 
     def depth(self, ct) -> int:
         return self._d(ct)
+
+    def set_depth(self, ct, d: int) -> None:
+        self._depth[id(ct)] = d
 
     # -- ring ops ------------------------------------------------------------
     def add(self, a, b):
@@ -619,7 +628,7 @@ class MockBackend(_BackendBase):
         ct.depth = 0
 
     def budget(self, ct: MockCipher) -> float:
-        return float(np.min(self.model.budget(ct.noise)))
+        return self.model.min_budget(ct.noise)
 
     def depth(self, ct: MockCipher) -> int:
         return ct.depth

@@ -82,6 +82,11 @@ class ExecReport:
     cache_hits: int = 0
     cache_admit_refreshes: int = 0
     history: list = dataclasses.field(default_factory=list)
+    # Observed noise headroom (bits) at every decrypt boundary, in
+    # execution order — the runtime half of the static verifier's
+    # soundness cross-check (VerifyReport.crosscheck): the abstract
+    # bound must never be tighter than what execution observed.
+    decrypt_headrooms: list = dataclasses.field(default_factory=list)
     # Recovery events this execution survived (overflow retries, device
     # -loss resumes, straggler exclusions) — see DESIGN §9.  A run that
     # recovered from overflow/device-loss executed partial attempts, so
@@ -248,10 +253,12 @@ class Executor:
         self.report: ExecReport | None = None
         self._guards = False          # decrypt-boundary guards armed?
         self._sentinel = None         # plaintext sentinel lane (guarded)
+        self._verify_report = None    # static VerifyReport of the last run
 
     # ------------------------------------------------------------ public
     def run(self, plan: QueryPlan, validate: bool = True) -> dict:
         cq = self.compile(plan)
+        self._static_verify(cq, mirror_begin_run=True, warm=False)
         if self.pl.optimized and self.pl.share_masks:
             # New serve epoch: masks derived by earlier runs on this
             # planner's cache now count as cross-query hits.
@@ -261,7 +268,23 @@ class Executor:
     def run_compiled(self, cq: CompiledQuery, validate: bool = True) -> dict:
         """Workload path: atoms were requested and flushed batch-wide by
         `run_workload`; execute against the warm shared evaluator."""
+        self._static_verify(cq, mirror_begin_run=False, warm=True)
         return self._run(cq, validate, warm=True)
+
+    def _static_verify(self, cq: CompiledQuery, mirror_begin_run: bool,
+                       warm: bool) -> None:
+        """Static admission (DESIGN §10): abstract-interpret the compiled
+        DAG against the noise/level/placement model before any ciphertext
+        work; error-severity findings reject the plan here.  Opt out with
+        Planner(..., verify=False)."""
+        self._verify_report = None
+        if not getattr(self.pl, "verify_plans", True):
+            return
+        from .verify import verify_compiled
+        rep = verify_compiled(self.pl, cq, mirror_begin_run=mirror_begin_run,
+                              warm=warm)
+        self._verify_report = rep
+        rep.raise_on_error()
 
     def _run(self, cq: CompiledQuery, validate: bool, warm: bool) -> dict:
         pl, bk = self.pl, self.bk
@@ -323,6 +346,11 @@ class Executor:
             self._sentinel = None
         if validate:
             self.report.validate()
+            if (self._verify_report is not None and not self.report.recoveries
+                    and faults.active() is None):
+                # Soundness: the static bound at every decrypt boundary
+                # must be no tighter than what execution observed.
+                self._verify_report.crosscheck(self.report)
         return out
 
     # --------------------------------------------------------- recovery
@@ -650,6 +678,8 @@ class Executor:
                 self._sentinel.verify(
                     self.bk.stats.max_depth,
                     query=self.report.name if self.report else "")
+        if self.report is not None:
+            self.report.decrypt_headrooms.append(float(self.bk.budget(ct)))
         return int(self.bk.decrypt(ct)[0])
 
     def _dec_agg(self, agg, r):
@@ -698,24 +728,35 @@ class Executor:
 
 def run_via_plan(planner, plan: QueryPlan, validate: bool = True,
                  shards: int | None = None,
-                 limb_shards: int | None = None) -> dict:
+                 limb_shards: int | None = None,
+                 verify: bool | None = None) -> dict:
     """Execute a QueryPlan through the compiled operator DAG.  Returns
     the same decrypted result structure as the legacy `run_qN` body.
 
     `shards=N` runs this plan's scan phase sharded over N mesh data
     lanes and `limb_shards=M` shards the k RNS limbs over M model-axis
     lanes (engine/sharded.py) without mutating the planner's default:
-    the context is installed for this call only."""
-    if shards is None and limb_shards is None:
-        return Executor(planner).run(plan, validate=validate)
-    from .sharded import make_shard_context
-    prev = getattr(planner, "shard_ctx", None)
-    planner.shard_ctx = make_shard_context(
-        shards if shards is not None else 1,
-        limb_shards=limb_shards if limb_shards is not None else 1,
-        limbs=getattr(planner.bk, "limbs", None),
-        ring_n=getattr(planner.bk, "slots", 0))
+    the context is installed for this call only.  `verify` overrides the
+    planner's static-verification knob for this call only (None keeps
+    the planner default)."""
+    prev_verify = getattr(planner, "verify_plans", True)
+    if verify is not None:
+        planner.verify_plans = verify
     try:
-        return Executor(planner).run(plan, validate=validate)
+        if shards is None and limb_shards is None:
+            # No context installed: leave planner.shard_ctx alone so a
+            # mid-run recovery's resharding stays observable post-call.
+            return Executor(planner).run(plan, validate=validate)
+        from .sharded import make_shard_context
+        prev = getattr(planner, "shard_ctx", None)
+        planner.shard_ctx = make_shard_context(
+            shards if shards is not None else 1,
+            limb_shards=limb_shards if limb_shards is not None else 1,
+            limbs=getattr(planner.bk, "limbs", None),
+            ring_n=getattr(planner.bk, "slots", 0))
+        try:
+            return Executor(planner).run(plan, validate=validate)
+        finally:
+            planner.shard_ctx = prev
     finally:
-        planner.shard_ctx = prev
+        planner.verify_plans = prev_verify

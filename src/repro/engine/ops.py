@@ -225,13 +225,46 @@ def reduce_blocks(bk, blocks: list) -> object:
     return bk.sum_slots(acc)
 
 
+# One level per ct-ct product the mask still has to absorb, plus one
+# level of slack for the fold/sum_slots add-and-rotate tail, whose noise
+# is real but below a full multiplicative level.  Without the slack,
+# edge-of-budget plans (Q19 optimized at depth 24 on a 25-level budget)
+# decrypt ~1.4 bits past the budget.
+INJECT_ADMIT_SLACK = 1
+
+
+def admit_inject(bk, mask: list, muls: int = 1) -> list:
+    """Decrypt-headroom admission where a mask enters an aggregation
+    tail: past here it absorbs `muls` ct-ct products plus the reduction
+    slop, so a lane that cannot take muls+1 more levels pays its planned
+    refresh now instead of decrypting past the budget.  A no-op whenever
+    the plan fits — the static verifier (engine/verify.py) proves every
+    decrypt boundary positive.
+
+    The top-up is noise maintenance, not a new encryption epoch, so the
+    handle keeps its multiplicative chain length: whether the admission
+    fires depends on the launch layout (fused CSE, per-block derivation
+    and the legacy bodies reach here with slightly different noise), and
+    depth accounting must not."""
+    out = []
+    for b in mask:
+        d0 = bk.depth(b)
+        b = bk.ensure_levels(b, muls + INJECT_ADMIT_SLACK)
+        if bk.depth(b) < d0:
+            bk.set_depth(b, d0)
+        out.append(b)
+    return out
+
+
 def masked_sum(bk, value_blocks: list, mask: list) -> object:
     bk.op_log["sum"] += 1
+    mask = admit_inject(bk, mask)
     return reduce_blocks(bk, mask_columns(bk, value_blocks, mask))
 
 
 def count(bk, mask: list) -> object:
     bk.op_log["count"] += 1
+    mask = admit_inject(bk, mask, muls=0)
     return reduce_blocks(bk, mask)
 
 
@@ -240,6 +273,7 @@ def partial_sums(bk, value_blocks: list, mask: list, chunk: int) -> list:
     each ciphertext carries n/chunk partial sums that the client combines
     exactly — avoids mod-t wraparound for big aggregates at *fewer*
     rotations than the full reduction."""
+    mask = admit_inject(bk, mask)
     filtered = mask_columns(bk, value_blocks, mask)
     out, batched = _stacked(bk, filtered)
     step = 1

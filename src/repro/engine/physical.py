@@ -146,6 +146,14 @@ class MaskNode:
             out.extend(c.atoms())
         return out
 
+    def clone(self) -> "MaskNode":
+        """Structural deep copy (pred/hop are shared read-only): lets
+        plan-mutation tooling graft a subtree into several positions
+        without aliasing the per-position scheduler annotations."""
+        return MaskNode(self.kind, self.table, self.pred,
+                        [c.clone() for c in self.children], self.hop,
+                        self.downstream_muls)
+
     def atom_needs(self) -> list:
         """(atom, need_levels) pairs for the whole subtree: how many ct-ct
         multiplications each atom's mask must absorb downstream — the

@@ -175,6 +175,22 @@ class QueryPlan:
     correlated: bool = False      # Q4/Q17-style subquery (extra LT stage)
     aux_masks: tuple = ()         # AuxMasks aggregates may partition on
 
+    def describe(self) -> str:
+        """One-line structural summary (verifier CLI / report headers)."""
+        bits = [f"fact={self.fact}"]
+        if self.where is not None:
+            bits.append("where")
+        if self.hops:
+            bits.append(f"hops={len(self.hops)}")
+        if self.group_by:
+            bits.append(f"group_by={self.group_by}")
+        if self.aux_masks:
+            bits.append(f"aux={len(self.aux_masks)}")
+        if self.correlated:
+            bits.append("correlated")
+        bits.append(f"aggs={len(self.aggs)}")
+        return f"{self.name}({', '.join(bits)})"
+
     # ---- Table-3 depth model ------------------------------------------
     def mask_depth(self, t: int, optimized: bool) -> int:
         parts = []

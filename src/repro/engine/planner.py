@@ -78,12 +78,18 @@ class PlanReport:
 class Planner:
     def __init__(self, db: Database, optimized: bool = True, cache=None,
                  shards: int | None = None, mesh="auto",
-                 guards: bool = False, limb_shards: int | None = None):
+                 guards: bool = False, limb_shards: int | None = None,
+                 verify: bool = True):
         from .workload import WorkloadCache
         self.db = db
         self.bk = db.bk
         self.optimized = optimized
         self.budget_levels = noise_budget_levels(self.bk)
+        # Static admission (DESIGN §10): the executor verifies every
+        # compiled plan against the abstract noise/level/placement model
+        # before touching ciphertexts; verify=False opts out (chaos
+        # harnesses and benchmarks that deliberately run broken plans).
+        self.verify_plans = verify
         # Sharded execution (DESIGN §4): shards=N partitions every
         # stacked block column over the mesh "data" axis; limb_shards=M
         # partitions each block's k RNS limbs over the "model" axis
@@ -148,6 +154,13 @@ class Planner:
         mask product; if that exceeds the whole budget the infeasible
         branch pays its single planned refresh inside ensure_levels."""
         return min(2 + downstream_muls, self.budget_levels)
+
+    def verify(self, plan: QueryPlan):
+        """Statically verify `plan` against this planner's state (noise
+        abstract interpretation + IR typing + mesh lint, engine/verify.py)
+        without executing it.  Returns a VerifyReport."""
+        from .verify import verify_plan
+        return verify_plan(self, plan)
 
     # ------------------------------------------------------------- report
     def report(self, plan: QueryPlan) -> PlanReport:
@@ -224,6 +237,7 @@ class Planner:
             return ops.masked_sum(bk, vals, mask)
         # Unoptimized: mask every column first, then form the expression
         # on filtered inputs (pushdown).
+        mask = ops.admit_inject(bk, mask)
         masked = {
             f.col: ops.mask_columns(bk, table.col(f.col).blocks, mask)
             for f in agg.factors if f.col is not None

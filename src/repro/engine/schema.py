@@ -49,6 +49,8 @@ class ColumnSpec:
                 return vals.astype(np.int64)      # already day offsets
             return np.array([date_to_int(v) for v in values], dtype=np.int64)
         if self.kind == "decimal":
+            # float64 product, rounded before the cast: scaled decimals
+            # stay < t = 2^16 < 2^53 — exact int64.
             return np.round(np.asarray(values, dtype=np.float64) * self.scale).astype(np.int64)
         return np.asarray(values, dtype=np.int64)
 

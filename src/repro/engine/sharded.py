@@ -284,6 +284,45 @@ def make_shard_context(shards: int, mesh="auto", limb_shards: int = 1,
                         limbs=limbs, ring_n=ring_n)
 
 
+def lint_shard_context(ctx: ShardContext, limbs: int | None = None,
+                       ring_n: int = 0) -> list:
+    """Static placement lint (engine/verify.py): check a shard context's
+    2-D geometry against the backend it will execute on.  Returns
+    (code, message) tuples; empty means the placement is consistent.
+
+    Rules: the context's recorded RNS tower / ring degree must match the
+    backend's; a *real* model axis requires k % M == 0 (the limb-padding
+    rule — padded limbs are ledger-only entities and must never get
+    device placement); and a real mesh's axis extents must match the
+    declared shard counts."""
+    out = []
+    if limbs is not None and ctx.limbs is not None and ctx.limbs != limbs:
+        out.append(("mesh.limbs",
+                    f"context RNS tower k={ctx.limbs} != backend k={limbs} "
+                    f"— gather-byte and limb-factor accounting would be "
+                    f"priced for the wrong ciphertext geometry"))
+    if ring_n and ctx.ring_n and ctx.ring_n != ring_n:
+        out.append(("mesh.ring",
+                    f"context ring_n={ctx.ring_n} != backend slots={ring_n}"))
+    if (ctx.limb_mesh is not None and ctx.limbs is not None
+            and ctx.limbs % ctx.limb_shards != 0):
+        out.append(("mesh.pad",
+                    f"real model axis with k={ctx.limbs} % M="
+                    f"{ctx.limb_shards} != 0 — padded limbs must stay "
+                    f"ledger-only, never device-placed"))
+    if ctx.mesh is not None:
+        shape = dict(getattr(ctx.mesh, "shape", None) or {})
+        if "data" in shape and shape["data"] != ctx.shards:
+            out.append(("mesh.data",
+                        f"mesh data axis has {shape['data']} devices, "
+                        f"context declares shards={ctx.shards}"))
+        if "model" in shape and shape["model"] != ctx.limb_shards:
+            out.append(("mesh.model",
+                        f"mesh model axis has {shape['model']} devices, "
+                        f"context declares limb_shards={ctx.limb_shards}"))
+    return out
+
+
 @contextlib.contextmanager
 def activate(bk, ctx: ShardContext | None):
     """Install ctx as bk.shard_ctx for the duration.  Reentrant: if the

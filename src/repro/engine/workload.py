@@ -319,7 +319,8 @@ class WorkloadReport:
         return self.cache.hit_rate
 
 
-def run_workload(planner, plans, validate: bool = True) -> WorkloadReport:
+def run_workload(planner, plans, validate: bool = True,
+                 verify: bool | None = None) -> WorkloadReport:
     """Compile a batch of QueryPlans through ONE physical pass.
 
     Optimized regime: all plans' mask trees are lowered and their atoms
@@ -332,6 +333,10 @@ def run_workload(planner, plans, validate: bool = True) -> WorkloadReport:
 
     Unoptimized planners (or fuse_masks=False) fall back to sequential
     per-plan execution — the classical no-sharing baseline.
+
+    `verify` overrides the planner's static-verification knob for this
+    batch only (None keeps the planner default); each plan is verified
+    against the warm cache state right before it executes.
     """
     from .executor import Executor
     bk = planner.bk
@@ -339,24 +344,30 @@ def run_workload(planner, plans, validate: bool = True) -> WorkloadReport:
     cs0 = cache.stats.clone()
     s0 = bk.stats.clone()
     results, reports = [], []
-    if planner.optimized and planner.fuse_masks:
-        ev = planner.evaluator()
-        cache.begin_run()                 # batch derivation epoch
-        compiled = []
-        for plan in plans:
-            ex = Executor(planner, evaluator=ev)
-            cq = ex.compile(plan)
-            ex.request_atoms(cq, ev)
-            compiled.append((ex, cq))
-        ev.flush()                        # one stacked launch per shape
-        for ex, cq in compiled:
-            results.append(ex.run_compiled(cq, validate=validate))
-            reports.append(ex.report)
-    else:
-        for plan in plans:
-            ex = Executor(planner)
-            results.append(ex.run(plan, validate=validate))
-            reports.append(ex.report)
+    prev_verify = getattr(planner, "verify_plans", True)
+    if verify is not None:
+        planner.verify_plans = verify
+    try:
+        if planner.optimized and planner.fuse_masks:
+            ev = planner.evaluator()
+            cache.begin_run()                 # batch derivation epoch
+            compiled = []
+            for plan in plans:
+                ex = Executor(planner, evaluator=ev)
+                cq = ex.compile(plan)
+                ex.request_atoms(cq, ev)
+                compiled.append((ex, cq))
+            ev.flush()                        # one stacked launch per shape
+            for ex, cq in compiled:
+                results.append(ex.run_compiled(cq, validate=validate))
+                reports.append(ex.report)
+        else:
+            for plan in plans:
+                ex = Executor(planner)
+                results.append(ex.run(plan, validate=validate))
+                reports.append(ex.report)
+    finally:
+        planner.verify_plans = prev_verify
     s1 = bk.stats
     return WorkloadReport(
         results=results, reports=reports,

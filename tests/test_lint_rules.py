@@ -1,0 +1,154 @@
+"""Repo AST lint (tools/lint_rules.py) + calibration-schema guards
+(benchmarks/common.py) — the two satellite static checks of DESIGN §10.
+"""
+import json
+import pathlib
+import sys
+import textwrap
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+sys.path.insert(0, str(ROOT))
+
+import lint_rules  # noqa: E402
+
+from benchmarks import common  # noqa: E402
+
+
+def _lint_src(tmp_path, src, name="engine_mod.py"):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(src))
+    return lint_rules.lint_file(str(p))
+
+
+# ---------------------------------------------------------------------------
+# R001: raw jnp modular arithmetic outside the dispatch layers.
+# ---------------------------------------------------------------------------
+
+def test_r001_fires_on_raw_jnp_mod(tmp_path):
+    out = _lint_src(tmp_path, """\
+        import jax.numpy as jnp
+
+        def bad(x, q):
+            return jnp.sum(x) % q
+    """)
+    assert [f[0] for f in out] == ["R001"]
+
+
+def test_r001_allows_the_modular_layers(tmp_path):
+    layer = tmp_path / "core"
+    layer.mkdir()
+    p = layer / "limbops.py"
+    p.write_text("import jax.numpy as jnp\n\ndef ok(x, q):\n"
+                 "    return jnp.add(x, x) % q\n")
+    assert lint_rules.lint_file(str(p)) == []
+
+
+def test_r001_ignores_plain_python_mod(tmp_path):
+    assert _lint_src(tmp_path, "def ok(a, b):\n    return a % b\n") == []
+
+
+# ---------------------------------------------------------------------------
+# R002: int64 multiply without an overflow-guard note.
+# ---------------------------------------------------------------------------
+
+def test_r002_fires_on_unguarded_int64_mul(tmp_path):
+    out = _lint_src(tmp_path, """\
+        import numpy as np
+
+        def bad(a, b):
+            return (a * b).astype(np.int64)
+    """)
+    assert [f[0] for f in out] == ["R002"]
+
+
+@pytest.mark.parametrize("guard", [
+    "# products < 2^34, exact int64",
+    "# stays below overflow",
+    "# fits int64",
+])
+def test_r002_suppressed_by_line_comment(tmp_path, guard):
+    out = _lint_src(tmp_path, f"""\
+        import numpy as np
+
+        def ok(a, b):
+            {guard}
+            return (a * b).astype(np.int64)
+    """)
+    assert out == []
+
+
+def test_r002_suppressed_by_docstring_guard(tmp_path):
+    out = _lint_src(tmp_path, '''\
+        import numpy as np
+
+        def ok(a, b):
+            """Operands are 16-bit, so products < 2^34 — exact int64."""
+            return (a * b).astype(np.int64)
+    ''')
+    assert out == []
+
+
+def test_r002_ignores_mul_without_int64(tmp_path):
+    assert _lint_src(tmp_path, "def ok(a, b):\n    return a * b\n") == []
+
+
+# ---------------------------------------------------------------------------
+# The repo itself must be clean (same invocation as the CI job).
+# ---------------------------------------------------------------------------
+
+def test_repo_is_lint_clean():
+    findings = lint_rules.lint_paths([str(ROOT / "src" / "repro")])
+    assert findings == [], "\n".join(
+        f"{p}:{ln}: {c} {m}" for c, p, ln, m in findings)
+
+
+# ---------------------------------------------------------------------------
+# op_costs calibration schema: fail loudly, never mis-price.
+# ---------------------------------------------------------------------------
+
+GOOD = {"n": 1024, "k": 8, "mul": 1.0, "mul_plain": 0.5, "mul_scalar": 0.2,
+        "add": 0.1, "rotate": 0.8, "refresh": 44.0}
+
+
+@pytest.fixture
+def costs_dir(tmp_path, monkeypatch):
+    monkeypatch.setattr(common, "RESULTS", str(tmp_path))
+    common._calibration.cache_clear()
+    common.paper_costs.cache_clear()
+    yield tmp_path
+    common._calibration.cache_clear()
+    common.paper_costs.cache_clear()
+
+
+def _write(costs_dir, d):
+    (costs_dir / "op_costs.json").write_text(json.dumps(d))
+
+
+def test_unknown_calibration_key_raises(costs_dir):
+    _write(costs_dir, {**GOOD, "mull": 2.0})      # typo'd op name
+    with pytest.raises(ValueError, match=r"unknown keys \['mull'\]"):
+        common.op_costs()
+
+
+def test_missing_calibration_key_raises(costs_dir):
+    bad = dict(GOOD)
+    del bad["rotate"]
+    _write(costs_dir, bad)
+    with pytest.raises(ValueError, match=r"missing keys \['rotate'\]"):
+        common.op_costs()
+
+
+def test_gather_byte_is_a_permitted_extra(costs_dir):
+    _write(costs_dir, {**GOOD, "gather_byte": 3.25e-11})
+    d = common.op_costs()
+    assert d["gather_byte"] == 3.25e-11
+    assert d["mul"] > 0
+
+
+def test_gather_byte_defaults_to_engine_constant(costs_dir):
+    from repro.engine.sharded import GATHER_BYTE_SECONDS
+    _write(costs_dir, GOOD)
+    assert common.op_costs()["gather_byte"] == GATHER_BYTE_SECONDS

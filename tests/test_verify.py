@@ -1,0 +1,301 @@
+"""Static plan verifier (engine/verify.py, DESIGN §10).
+
+Three contract families:
+
+  * positive: every shipped TPC-H DAG verifies clean in both regimes,
+    verification never touches a real ciphertext, and the static
+    headroom at each decrypt boundary is sound (<= runtime-observed).
+  * negative: seeded plan mutations — dropped refresh sizing, deepened
+    subtrees, aliased cache entries, misplaced limb shards — are each
+    rejected statically, before any ciphertext op runs.
+  * plumbing: the opt-out knob, skip classification for non-lowerable
+    plans, and the pure dead-refresh analysis.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.engine import queries as Q
+from repro.engine.executor import Executor, run_via_plan
+from repro.engine.physical import MaskNode, annotate_downstream
+from repro.engine.plan import Agg, And, Or, Pred, QueryPlan
+from repro.engine.planner import Planner
+from repro.engine.sharded import ShardContext, lint_shard_context
+from repro.engine.verify import (PlanVerificationError, _dead_refresh_ids,
+                                 verify_compiled, verify_plan)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+PORTED = list(Q.PLAN_EXECUTABLE)
+
+# Every code a mutation may legitimately surface as; anything outside
+# this set is a verifier bug, not a detection.
+MUTATION_CODES = {"noise.exhausted", "refresh.unplanned", "refresh.unpredicted",
+                  "depth.over", "depth.under", "ir.levels", "cache.alias",
+                  "mesh.limbs", "mesh.ring", "mesh.pad", "mesh.data",
+                  "mesh.model", "mesh.ledger", "ir.shape"}
+
+
+def _codes(findings):
+    return {f.code for f in findings}
+
+
+def _find(node, kind):
+    if node.kind == kind:
+        return node
+    for c in node.children:
+        got = _find(c, kind)
+        if got is not None:
+            return got
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Positive sweep: shipped plans verify clean, purely.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("optimized", [True, False])
+@pytest.mark.parametrize("qn", PORTED)
+def test_shipped_plans_verify_clean(tiny_db, qn, optimized):
+    pl = Planner(tiny_db, optimized=optimized, verify=False)
+    rep = pl.verify(Q.QUERIES[qn][0]())
+    assert not rep.skipped
+    assert rep.ok, [str(f) for f in rep.errors]
+    assert rep.decrypts, "every shipped plan decrypts at least once"
+    assert all(d["headroom"] > 0 for d in rep.decrypts)
+
+
+@pytest.mark.parametrize("qn", ["Q12", "Q19"])
+def test_verification_touches_no_ciphertexts(tiny_db, mock_paper, qn):
+    """The purity contract: a verify pass leaves the real backend's
+    OpStats, refresh log and cache bit-identical."""
+    bk = mock_paper
+    pl = Planner(tiny_db, optimized=False, verify=False)
+    before = dataclasses.asdict(bk.stats)
+    logs = len(bk.refresh_log)
+    entries = dict(pl.mask_cache.entries)
+    rep = pl.verify(Q.QUERIES[qn][0]())
+    assert rep.ok
+    assert dataclasses.asdict(bk.stats) == before
+    assert len(bk.refresh_log) == logs
+    assert pl.mask_cache.entries == entries
+
+
+def test_crosscheck_static_headroom_is_sound(tiny_db):
+    """Auto-verification + post-run crosscheck: the abstract trajectory
+    mirrors the mock backend op-for-op, so static headroom matches the
+    runtime-observed headroom at every decrypt boundary."""
+    pl = Planner(tiny_db, optimized=True)
+    assert pl.verify_plans
+    ex = Executor(pl)
+    ex.run(Q.QUERIES["Q6"][0]())
+    rep = ex._verify_report
+    assert rep is not None and rep.ok
+    obs = ex.report.decrypt_headrooms
+    assert len(obs) == len(rep.decrypts) == 1
+    static = [d["headroom"] for d in rep.decrypts]
+    assert all(s <= o + 1e-6 for s, o in zip(static, obs))
+    assert np.allclose(static, obs), (static, obs)
+    # ...and the crosscheck rejects an execution that observed *less*
+    # headroom than proven (an under-approximating abstract model).
+    ex.report.decrypt_headrooms = [obs[0] - 1.0]
+    with pytest.raises(AssertionError, match="under-approximated"):
+        rep.crosscheck(ex.report)
+
+
+def test_verify_opt_out_knob(tiny_db):
+    pl = Planner(tiny_db, optimized=True, verify=False)
+    ex = Executor(pl)
+    ex.run(Q.QUERIES["Q6"][0]())
+    assert ex._verify_report is None
+    # per-call override beats the planner default in both directions
+    run_via_plan(pl, Q.QUERIES["Q6"][0](), verify=True)
+    assert pl.verify_plans is False, "override must not stick"
+
+
+@pytest.mark.parametrize("qn,code", [("Q4", "ir.correlated"),
+                                     ("Q5", "ir.unsupported")])
+def test_non_lowerable_plans_are_skipped_not_failed(tiny_db, qn, code):
+    rep = Planner(tiny_db, optimized=True, verify=False).verify(
+        Q.QUERIES[qn][0]())
+    assert rep.skipped
+    assert code in _codes(rep.findings)
+    assert not rep.errors
+
+
+# ---------------------------------------------------------------------------
+# Negative: seeded mutations are rejected statically.
+# ---------------------------------------------------------------------------
+
+def test_dropped_refresh_sizing_fails_ir_typing(tiny_db):
+    """Zeroing a translated node's downstream_muls (what a dropped
+    planned-refresh annotation looks like) violates the scheduler
+    recurrence the verifier re-derives."""
+    pl = Planner(tiny_db, optimized=True, verify=False)
+    cq = Executor(pl).compile(Q.QUERIES["Q19"][0]())
+    node = _find(cq.where_node, "translated")
+    assert node is not None and node.downstream_muls > 0
+    node.downstream_muls = 0
+    rep = verify_compiled(pl, cq)
+    assert "ir.levels" in _codes(rep.errors), [str(f) for f in rep.findings]
+
+
+def test_deepened_subtree_fails_noise_or_depth(tiny_db):
+    """Grafting 8 extra conjunction layers onto Q6's WHERE blows the
+    depth/noise envelope; the verifier must reject it before execution
+    even though the annotations are self-consistent."""
+    pl = Planner(tiny_db, optimized=True, verify=False)
+    cq = Executor(pl).compile(Q.QUERIES["Q6"][0]())
+    root = cq.where_node
+    for _ in range(8):
+        root = MaskNode("and", root.table,
+                        children=[root, cq.where_node.clone()])
+    annotate_downstream(root, cq.inject_layers)
+    cq.where_node = root
+    rep = verify_compiled(pl, cq)
+    assert rep.errors
+    codes = _codes(rep.errors)
+    assert codes & {"noise.exhausted", "depth.over", "refresh.unplanned",
+                    "refresh.unpredicted"}, codes
+    assert codes <= MUTATION_CODES, codes
+
+
+@pytest.fixture
+def alias_setup(tiny_db):
+    """A warm cache whose shared entry was tampered to serve at born
+    level 0 with near-exhausted noise — the PR 6 reconstruction: the
+    first product refreshes the served blocks in place under every
+    consumer holding them."""
+    p = Pred("l_shipmode", "=", "MAIL")
+    q = Pred("l_quantity", "<", 25)
+    plan = QueryPlan(name="alias", fact="lineitem",
+                     where=And((p, Or((p, q)))),
+                     aggs=(Agg("count", (), "n"),))
+    pl = Planner(tiny_db, optimized=True, verify=False)
+    Executor(pl).run(plan, validate=True)          # warm the cache
+    assert pl.mask_cache.entries
+    for entry in pl.mask_cache.entries.values():
+        entry.born_levels = 0
+        for b in entry.blocks:
+            b.noise = -1.5        # serves as-is, exhausts on first product
+    return pl, plan
+
+
+def test_aliased_cache_refresh_detected_statically(alias_setup):
+    pl, plan = alias_setup
+    rep = verify_plan(pl, plan)
+    assert "cache.alias" in _codes(rep.errors), [str(f) for f in rep.findings]
+    hits = [f for f in rep.errors if f.code == "cache.alias"]
+    assert any("served to 2 consumers" in f.detail for f in hits), hits
+
+
+def test_admission_raises_before_any_ciphertext_op(alias_setup, mock_paper):
+    """End to end: Executor.run refuses the poisoned-cache plan at
+    admission — typed error, zero real ops."""
+    pl, plan = alias_setup
+    pl.verify_plans = True
+    before = dataclasses.asdict(mock_paper.stats)
+    with pytest.raises(PlanVerificationError, match="cache.alias"):
+        Executor(pl).run(plan)
+    assert dataclasses.asdict(mock_paper.stats) == before
+
+
+def test_misplaced_limb_shard_rejected(tiny_db, mock_paper):
+    pl = Planner(tiny_db, optimized=True, verify=False)
+    pl.shard_ctx = ShardContext(2, limb_shards=1,
+                                limbs=mock_paper.limbs + 1,
+                                ring_n=mock_paper.slots)
+    rep = pl.verify(Q.QUERIES["Q6"][0]())
+    assert "mesh.limbs" in _codes(rep.errors)
+
+
+def test_limb_padding_rule_linted():
+    class _FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 2, "model": 4}
+
+    ctx = ShardContext(2, mesh=_FakeMesh(), limb_shards=4, limbs=30,
+                       ring_n=64)
+    codes = {c for c, _ in lint_shard_context(ctx, limbs=30, ring_n=64)}
+    assert "mesh.pad" in codes          # 30 % 4 != 0 without padding
+    ok = ShardContext(2, mesh=_FakeMesh(), limb_shards=4, limbs=32,
+                      ring_n=64)
+    assert lint_shard_context(ok, limbs=32, ring_n=64) == []
+
+
+# ---------------------------------------------------------------------------
+# Dead-refresh analysis (pure).
+# ---------------------------------------------------------------------------
+
+def _ev(eid, kind="planned", admission=False):
+    return {"id": eid, "kind": kind, "admission": admission,
+            "what": f"planned(levels=9)#{eid}", "stage": "where"}
+
+
+def test_dead_refresh_flagged_when_counterfactual_clears():
+    events = [_ev(0)]
+    decrypts = [{"sites": {0}, "headroom_nr": 5.0}]
+    assert _dead_refresh_ids(events, decrypts) == [0]
+
+
+def test_needed_refresh_not_flagged():
+    events = [_ev(0)]
+    decrypts = [{"sites": {0}, "headroom_nr": -3.0}]
+    assert _dead_refresh_ids(events, decrypts) == []
+
+
+def test_refresh_needed_by_any_decrypt_survives():
+    events = [_ev(0)]
+    decrypts = [{"sites": {0}, "headroom_nr": 5.0},
+                {"sites": {0}, "headroom_nr": -0.1}]
+    assert _dead_refresh_ids(events, decrypts) == []
+
+
+def test_auto_refresh_poisons_the_counterfactual():
+    events = [_ev(0), _ev(1, kind="auto")]
+    decrypts = [{"sites": {0}, "headroom_nr": 5.0}]
+    assert _dead_refresh_ids(events, decrypts) == []
+
+
+def test_admission_and_unseen_refreshes_ignored():
+    events = [_ev(0, admission=True), _ev(1)]
+    decrypts = [{"sites": {0}, "headroom_nr": 5.0}]
+    assert _dead_refresh_ids(events, decrypts) == []
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis fuzz (optional dependency; skipped when absent).
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=8, deadline=None)
+    @given(layers=st.integers(min_value=0, max_value=6))
+    def test_fuzz_deepen_never_crashes_verifier(tiny_db, layers):
+        pl = Planner(tiny_db, optimized=True, verify=False)
+        cq = Executor(pl).compile(Q.QUERIES["Q6"][0]())
+        root = cq.where_node
+        for _ in range(layers):
+            root = MaskNode("and", root.table,
+                            children=[root, cq.where_node.clone()])
+        annotate_downstream(root, cq.inject_layers)
+        cq.where_node = root
+        rep = verify_compiled(pl, cq)
+        assert "verify.crash" not in _codes(rep.findings)
+        assert _codes(rep.errors) <= MUTATION_CODES
+
+    @settings(max_examples=8, deadline=None)
+    @given(delta=st.integers(min_value=1, max_value=7))
+    def test_fuzz_annotation_tamper_always_detected(tiny_db, delta):
+        pl = Planner(tiny_db, optimized=True, verify=False)
+        cq = Executor(pl).compile(Q.QUERIES["Q19"][0]())
+        node = _find(cq.where_node, "translated")
+        node.downstream_muls += delta
+        rep = verify_compiled(pl, cq)
+        assert "ir.levels" in _codes(rep.errors)

@@ -1,0 +1,149 @@
+#!/usr/bin/env python
+"""Repo-specific AST lint for the HE engine (CI `static-analysis` job).
+
+Two rules, both born from real bug classes in this codebase:
+
+R001  raw-jnp-mod: modular arithmetic on jax.numpy values (`x % q` with
+      a `jnp` reference anywhere in the expression) outside the blessed
+      modular layers.  Everything above core/{limbops,ntt,bfv,encoder}
+      and kernels/ must go through the limbops dispatch so the Pallas /
+      XLA lowering decision stays in one place — a stray `jnp` mod in
+      engine code silently bypasses the u32 kernel path.
+
+R002  bare-int64-mul: an integer multiply that names int64 in its
+      statement (astype/dtype casts, int64-typed temporaries) without an
+      overflow-guard note.  int64 products of 62-bit operands wrap
+      silently under JAX; every such site must state its bound (e.g.
+      "products < 2^34, exact int64") in a nearby comment or the
+      function docstring, or route through kernels/u32.py.
+
+Zero third-party dependencies: stdlib ast only, so the lint runs in any
+CI container.  Exit status 1 iff a finding is emitted.
+
+Usage:  python tools/lint_rules.py [paths...]   (default: src/repro)
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+# Modular layers allowed to use raw jnp modular arithmetic (R001).
+MOD_ALLOWLIST = (
+    "core/limbops.py",
+    "core/ntt.py",
+    "core/bfv.py",
+    "core/encoder.py",
+    "kernels/",
+)
+
+# A multiply counts as overflow-guarded if one of these appears in its
+# statement's trailing comments, the line above, or the enclosing
+# function's docstring.
+GUARD_RE = re.compile(
+    r"overflow|exact int64|exact in int64|< *2[\^*][\^*]?\d+"
+    r"|2[\^*][\^*]?\d+ *[-—] *exact|< *\w+[\^*][\^*]?2\b|fits int64",
+    re.IGNORECASE)
+
+INT64_RE = re.compile(r"\bu?int64\b")
+
+
+def _contains_jnp(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Name) and n.id == "jnp"
+               for n in ast.walk(node))
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, src: str):
+        self.path = path
+        self.lines = src.splitlines()
+        self.findings: list[tuple[str, int, str]] = []
+        self.doc_stack: list[str] = []
+        self.rel = path.replace(os.sep, "/")
+
+    # -- helpers ---------------------------------------------------------
+    def _line(self, i: int) -> str:
+        return self.lines[i - 1] if 1 <= i <= len(self.lines) else ""
+
+    def _guarded(self, node: ast.BinOp) -> bool:
+        ctx = [self._line(node.lineno), self._line(node.lineno - 1),
+               self._line(getattr(node, "end_lineno", node.lineno))]
+        if any(GUARD_RE.search(t) for t in ctx):
+            return True
+        return any(GUARD_RE.search(doc) for doc in self.doc_stack if doc)
+
+    def _statement_text(self, node: ast.AST) -> str:
+        lo = node.lineno
+        hi = getattr(node, "end_lineno", lo)
+        return "\n".join(self._line(i) for i in range(lo, hi + 1))
+
+    # -- scope tracking for docstring guards -----------------------------
+    def _visit_scope(self, node):
+        self.doc_stack.append(ast.get_docstring(node) or "")
+        self.generic_visit(node)
+        self.doc_stack.pop()
+
+    visit_FunctionDef = visit_AsyncFunctionDef = visit_ClassDef = _visit_scope
+
+    # -- the rules -------------------------------------------------------
+    def visit_BinOp(self, node: ast.BinOp):
+        if isinstance(node.op, ast.Mod):
+            if (not any(self.rel.endswith(p) or ("/" + p) in self.rel
+                        for p in MOD_ALLOWLIST if p.endswith(".py"))
+                    and not any(("/" + p) in self.rel for p in MOD_ALLOWLIST
+                                if p.endswith("/"))
+                    and _contains_jnp(node)):
+                self.findings.append((
+                    "R001", node.lineno,
+                    "raw jax.numpy modular arithmetic outside the "
+                    "limbops/ntt/bfv dispatch layers — route through "
+                    "core.limbops so the kernel lowering stays unified"))
+        elif isinstance(node.op, ast.Mult):
+            text = self._statement_text(node)
+            if INT64_RE.search(text) and not self._guarded(node):
+                self.findings.append((
+                    "R002", node.lineno,
+                    "int64 multiply without an overflow-guard note — "
+                    "state the product bound (e.g. '< 2^34, exact "
+                    "int64') in a comment/docstring or use kernels.u32"))
+        self.generic_visit(node)
+
+
+def lint_file(path: str) -> list[tuple[str, str, int, str]]:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:  # pragma: no cover - repo code always parses
+        return [("R000", path, e.lineno or 0, f"syntax error: {e.msg}")]
+    v = _Visitor(path, src)
+    v.doc_stack.append(ast.get_docstring(tree) or "")
+    v.visit(tree)
+    return [(code, path, line, msg) for code, line, msg in v.findings]
+
+
+def lint_paths(paths: list[str]) -> list[tuple[str, str, int, str]]:
+    findings = []
+    for root in paths:
+        if os.path.isfile(root):
+            findings.extend(lint_file(root))
+            continue
+        for dirpath, _dirs, files in os.walk(root):
+            for fn in sorted(files):
+                if fn.endswith(".py"):
+                    findings.extend(lint_file(os.path.join(dirpath, fn)))
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = (argv if argv is not None else sys.argv[1:]) or ["src/repro"]
+    findings = lint_paths(args)
+    for code, path, line, msg in findings:
+        print(f"{path}:{line}: {code} {msg}")
+    print(f"lint_rules: {len(findings)} finding(s) over {args}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
